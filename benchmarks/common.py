@@ -1,0 +1,77 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.aqp import workload as W
+from repro.aqp.queries import assemble_results, decompose
+from repro.core.engine import EngineConfig, VerdictEngine
+
+
+def exact_cells(relation, engine, q):
+    groups = engine._discover_groups(q)
+    plan = decompose(relation.schema, q, groups)
+    theta = relation.exact_answer(plan.snippets)
+    cells = assemble_results(plan, theta, np.zeros(plan.snippets.n),
+                             relation.cardinality)
+    return {(c["group"], c["agg"]): c["estimate"] for c in cells}
+
+
+def train_engines(relation, train_queries, *, sample_rate=0.15, n_batches=8,
+                  capacity=512, refit_steps=60, seed=0, learn_sigma=True):
+    """Returns (verdict, nolearn) with verdict trained on train_queries."""
+    verdict = VerdictEngine(relation, EngineConfig(
+        sample_rate=sample_rate, n_batches=n_batches, capacity=capacity,
+        seed=seed))
+    nolearn = VerdictEngine(relation, EngineConfig(
+        sample_rate=sample_rate, n_batches=n_batches, capacity=capacity,
+        seed=seed, learning=False))
+    for q in train_queries:
+        verdict.execute(q)
+    # learn_sigma: the analytic sigma^2 (App. F.3) underestimates the prior
+    # variance (range-averaged answers shrink it), which over-tightens the
+    # improved bounds; NLL-learning sigma^2 jointly (exact gradients) fixes
+    # the calibration (EXPERIMENTS.md, Fig. 5 discussion).
+    verdict.refit(steps=refit_steps, learn_sigma=learn_sigma)
+    return verdict, nolearn
+
+
+def eval_queries(relation, verdict, nolearn, queries, *, max_batches=2):
+    """Per-cell records comparing improved vs raw answers at a fixed budget."""
+    rows = []
+    for q in queries:
+        t0 = time.perf_counter()
+        rv = verdict.execute(q, max_batches=max_batches)
+        tv = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        rn = nolearn.execute(q, max_batches=max_batches)
+        tn = time.perf_counter() - t0
+        exact = exact_cells(relation, verdict, q)
+        for cv, cn in zip(rv.cells, rn.cells):
+            ex = exact[(cv["group"], cv["agg"])]
+            if abs(ex) < 1e-9:
+                continue
+            rows.append({
+                "exact": ex,
+                "v_est": cv["estimate"], "v_bound": np.sqrt(cv["beta2"]),
+                "n_est": cn["estimate"], "n_bound": np.sqrt(cn["beta2"]),
+                "v_err": abs(cv["estimate"] - ex) / abs(ex),
+                "n_err": abs(cn["estimate"] - ex) / abs(ex),
+                "v_rel_bound": np.sqrt(cv["beta2"]) / abs(ex),
+                "n_rel_bound": np.sqrt(cn["beta2"]) / abs(ex),
+                "v_time": tv, "n_time": tn,
+            })
+    return rows
+
+
+def time_to_target(engine, queries, target):
+    batches = tuples = t_total = 0
+    for q in queries:
+        t0 = time.perf_counter()
+        r = engine.execute(q, target_rel_error=target)
+        t_total += time.perf_counter() - t0
+        batches += r.batches_used
+        tuples += r.tuples_scanned
+    return {"batches": batches, "tuples": tuples, "seconds": t_total}

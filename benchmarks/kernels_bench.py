@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: us/call for the jnp oracle path (the CPU-real
+number) and interpret-mode kernel validation timing (correctness path; TPU
+wall-time comes from the dry-run roofline, not this container)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _timeit(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # se_covariance oracle at synopsis scale (n=512, l=4)
+    from repro.kernels.se_covariance.ref import se_cov_matrix_ref
+
+    n, l = 512, 4
+    lo = jnp.asarray(rng.uniform(0, 0.6, (n, l)))
+    hi = lo + 0.2
+    ls = jnp.ones((l,))
+    norm = jnp.ones((n,))
+    f = jax.jit(lambda a, b: se_cov_matrix_ref(a, b, a, b, ls, 1.0, norm, norm))
+    rows.append(("kernel/se_covariance_ref_512x512_us", _timeit(f, lo, hi)))
+
+    # range_mask_agg oracle at scan-block scale (T=65536, Q=128)
+    from repro.kernels.range_mask_agg.ref import range_mask_agg_ref
+
+    t, q = 65536, 128
+    x = jnp.asarray(rng.uniform(0, 1, (t, 3)), jnp.float32)
+    payload = jnp.asarray(rng.normal(size=(t, 5)), jnp.float32)
+    qlo = jnp.asarray(rng.uniform(0, 0.6, (q, 3)), jnp.float32)
+    qhi = qlo + 0.3
+    em = jnp.ones((t, q), jnp.float32)
+    g = jax.jit(range_mask_agg_ref)
+    rows.append(("kernel/range_mask_agg_ref_64k_x128_us",
+                 _timeit(g, x, payload, qlo, qhi, em)))
+
+    # gp_batch_infer oracle at serving scale (Q=256, C=1024)
+    from repro.kernels.gp_batch_infer.ref import gp_batch_infer_ref
+
+    qn, c = 256, 1024
+    k = jnp.asarray(rng.normal(0, 0.1, (qn, c)), jnp.float32)
+    sinv = jnp.eye(c, dtype=jnp.float32)
+    h = jax.jit(gp_batch_infer_ref)
+    args = (k, sinv, jnp.zeros((c,), jnp.float32),
+            jnp.ones((qn,), jnp.float32), jnp.zeros((qn,), jnp.float32),
+            jnp.zeros((qn,), jnp.float32), jnp.full((qn,), 0.01, jnp.float32))
+    rows.append(("kernel/gp_batch_infer_ref_256x1024_us", _timeit(h, *args)))
+    return rows

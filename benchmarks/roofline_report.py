@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run JSONL (EXPERIMENTS.md §Roofline source)."""
+from __future__ import annotations
+
+import json
+import os
+
+HEADERS = ("arch", "shape", "mesh", "label", "compute_s", "memory_s",
+           "collective_s", "dominant", "useful_ratio", "args_gb", "temp_gb")
+
+
+def load(path="experiments/dryrun.jsonl"):
+    recs = {}
+    if not os.path.exists(path):
+        return []
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"), r.get("label"))
+        recs[key] = r  # last record wins (reruns supersede failures)
+    return list(recs.values())
+
+
+def rows(path="experiments/dryrun.jsonl", label=None):
+    out = []
+    for r in load(path):
+        if not r.get("ok"):
+            continue
+        if label and r.get("label") != label:
+            continue
+        rf = r["roofline"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "label": r.get("label", "baseline"),
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "useful_ratio": r.get("useful_flops_ratio", 0.0),
+            "args_gb": r["memory"]["argument_gb"],
+            "temp_gb": r["memory"]["temp_gb"],
+            "bound_s": rf["step_time_lower_bound_s"],
+            "roofline_fraction": rf["roofline_fraction"],
+        })
+    return sorted(out, key=lambda x: (x["arch"], x["shape"], x["mesh"]))
+
+
+def markdown(path="experiments/dryrun.jsonl", label="baseline"):
+    lines = ["| arch | shape | mesh | compute s | memory s | collective s | "
+             "dominant | useful ratio | roofline frac | arg GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows(path, label):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['dominant'].replace('_s','')} "
+            f"| {r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} "
+            f"| {r['args_gb']:.2f} |")
+    return "\n".join(lines)
+
+
+def run():
+    rs = rows()
+    ok = len(rs)
+    doms = {}
+    for r in rs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    out = [("roofline/cells_ok", ok)]
+    for k, v in sorted(doms.items()):
+        out.append((f"roofline/dominant_{k}", v))
+    if rs:
+        out.append(("roofline/mean_useful_ratio",
+                    sum(r["useful_ratio"] for r in rs) / ok))
+    return out

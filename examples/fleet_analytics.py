@@ -1,0 +1,62 @@
+"""In-situ use: Verdict answering analytics over model-fleet serving telemetry.
+
+The natural coupling between the paper's engine and the LM substrate it ships
+with: request logs (latency, tokens, batch, model id, timestamp) become a
+relation; operators ask streams of aggregate dashboards queries; Verdict
+learns the telemetry distribution and answers from ever-smaller samples.
+
+    PYTHONPATH=src python examples/fleet_analytics.py
+"""
+import numpy as np
+
+from repro.aqp.queries import AggQuery, AggSpec, CatEq, NumRange
+from repro.aqp.relation import Relation
+from repro.core.engine import EngineConfig, VerdictEngine
+from repro.core.types import Schema
+
+
+def make_telemetry(seed=0, n=200_000):
+    rng = np.random.default_rng(seed)
+    ts = rng.uniform(0, 72.0, n)  # hours
+    prompt_len = rng.uniform(16, 4096, n)
+    batch = rng.integers(1, 9, n).astype(float)
+    model = rng.integers(0, 10, n)  # the 10 assigned archs
+    diurnal = 1.0 + 0.4 * np.sin(2 * np.pi * ts / 24.0)
+    model_cost = np.linspace(0.5, 3.0, 10)[model]
+    latency_ms = (20 + 0.08 * prompt_len) * diurnal * model_cost \
+        + rng.normal(0, 8, n)
+    tokens_out = rng.uniform(16, 512, n)
+    schema = Schema(
+        num_lo=(0.0, 16.0, 1.0), num_hi=(72.0, 4096.0, 8.0),
+        cat_sizes=(10,), n_measures=2,
+        num_names=("hour", "prompt_len", "batch"),
+        cat_names=("model",), measure_names=("latency_ms", "tokens_out"))
+    num = np.stack([ts, prompt_len, batch], 1)
+    return Relation.from_columns(schema, num, model[:, None].astype(np.int32),
+                                 np.stack([latency_ms, tokens_out], 1))
+
+
+def main():
+    rel = make_telemetry()
+    eng = VerdictEngine(rel, EngineConfig(sample_rate=0.05, n_batches=8,
+                                          capacity=512))
+    rng = np.random.default_rng(1)
+    print("operator dashboard queries (avg latency by window/model):")
+    for i in range(25):
+        t0 = rng.uniform(0, 60)
+        q = AggQuery(
+            aggs=(AggSpec("AVG", 0),),
+            predicates=(NumRange(0, t0, t0 + rng.uniform(2, 12)),
+                        CatEq(0, int(rng.integers(0, 10)))))
+        r = eng.execute(q, target_rel_error=0.02)
+        c = r.cells[0]
+        print(f"  q{i:02d}: avg latency {c['estimate']:8.2f} ms "
+              f"+- {1.96*np.sqrt(c['beta2']):6.2f}  "
+              f"(batches used: {r.batches_used})")
+        if i == 11:
+            eng.refit(steps=50)
+            print("  --- refit: engine has learned the diurnal pattern ---")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""End-to-end LM training driver on the shared substrate (smoke scale).
+
+Any of the 10 assigned architectures trains through the same launcher the
+dry-run validates at 256/512 chips; on this CPU container we run the reduced
+config for a few hundred steps with checkpoint/restart enabled.
+
+    PYTHONPATH=src python examples/train_lm.py --arch gemma2-2b --steps 200
+"""
+import argparse
+import sys
+
+from repro.launch import train as TR
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_train")
+    args = ap.parse_args()
+    TR.main(["--arch", args.arch, "--smoke", "--steps", str(args.steps),
+             "--batch", "4", "--seq", "32", "--accum", "2",
+             "--ckpt-every", "50", "--ckpt-dir", args.ckpt_dir])
+
+
+if __name__ == "__main__":
+    main()

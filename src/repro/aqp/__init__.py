@@ -1,0 +1,2 @@
+from repro.aqp.relation import Relation
+from repro.aqp.queries import AggQuery, AggSpec, CatEq, CatIn, NumEq, NumRange

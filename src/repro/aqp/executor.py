@@ -1,0 +1,130 @@
+"""Snippet evaluation over tuple blocks + CLT error bounds.
+
+The TPU-idiomatic form of a multi-snippet scan: build a (tuples × snippets)
+predicate mask with vectorized compares, then aggregate with mask^T @ values on
+the MXU (see ``repro.kernels.range_mask_agg`` for the Pallas kernel; this module
+is the pure-jnp oracle and the host-side accumulation / estimate logic).
+
+Distribution: relations are sharded over the ``data`` mesh axis; each device
+computes local partial (sum, count, sumsq) vectors and a single ``psum``
+finishes the aggregation — the collective *is* the aggregation tree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import AVG, FREQ, RawAnswer, SnippetBatch
+
+BIG_BETA2 = 1e12  # raw error for snippets with no support in the scanned sample
+
+
+@dataclasses.dataclass(frozen=True)
+class Partials:
+    """Sufficient statistics accumulated over scanned tuples."""
+
+    sums: jnp.ndarray  # (n,) sum of measure over matching tuples
+    sumsq: jnp.ndarray  # (n,)
+    count: jnp.ndarray  # (n,) matching tuples
+    scanned: jnp.ndarray  # () total tuples scanned
+
+    @staticmethod
+    def zeros(n: int) -> "Partials":
+        z = jnp.zeros((n,))
+        return Partials(z, z, z, jnp.zeros(()))
+
+    def __add__(self, other: "Partials") -> "Partials":
+        return Partials(
+            self.sums + other.sums,
+            self.sumsq + other.sumsq,
+            self.count + other.count,
+            self.scanned + other.scanned,
+        )
+
+
+def predicate_mask(num_normalized, cat, snippets: SnippetBatch):
+    """(T, n) float mask of tuples satisfying each snippet's predicates."""
+    x = num_normalized  # (T, l), normalized units — same as snippet lo/hi
+    m_num = jnp.all(
+        (x[:, None, :] >= snippets.lo[None, :, :] - 1e-12)
+        & (x[:, None, :] <= snippets.hi[None, :, :] + 1e-12),
+        axis=-1,
+    )
+    mask = m_num
+    c = cat.shape[1] if cat.ndim == 2 else 0
+    for k in range(c):
+        # snippets.cat[:, k, :]: (n, V); cat[:, k]: (T,) codes
+        mk = jnp.take(snippets.cat[:, k, :], cat[:, k], axis=1)  # (n, T)
+        mask = mask & mk.T
+    return mask.astype(jnp.float64)
+
+
+@partial(jax.jit, static_argnames=())
+def eval_partials(num_normalized, cat, measures, snippets: SnippetBatch) -> Partials:
+    """Partial statistics for one tuple block (pure-jnp oracle path)."""
+    mask = predicate_mask(num_normalized, cat, snippets)  # (T, n)
+    vals = measures[:, jnp.arange(measures.shape[1])]  # (T, m)
+    per_measure_sum = mask.T @ measures  # (n, m)
+    per_measure_sq = mask.T @ (measures * measures)  # (n, m)
+    idx = snippets.measure[:, None]
+    sums = jnp.take_along_axis(per_measure_sum, idx, axis=1)[:, 0]
+    sumsq = jnp.take_along_axis(per_measure_sq, idx, axis=1)[:, 0]
+    count = jnp.sum(mask, axis=0)
+    return Partials(sums, sumsq, count, jnp.asarray(float(num_normalized.shape[0])))
+
+
+jax.tree_util.register_dataclass(
+    Partials, data_fields=("sums", "sumsq", "count", "scanned"), meta_fields=()
+)
+
+
+def eval_partials_sharded(mesh, axis: str, num_normalized, cat, measures, snippets):
+    """Distributed partials over a relation sharded on ``axis`` (shard_map+psum)."""
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    def local(x, c, m, s):
+        p = eval_partials(x, c, m, s)
+        return jax.tree.map(lambda v: jax.lax.psum(v, axis), p)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P()),
+        out_specs=P(),
+    )
+    return fn(num_normalized, cat, measures, snippets)
+
+
+@partial(jax.jit, static_argnames=("exact",))
+def estimates_from_partials(parts: Partials, snippets: SnippetBatch, exact: bool = False):
+    """CLT raw answers (theta_i, beta_i^2) from accumulated partials.
+
+    FREQ: p_hat = count/scanned, beta^2 = p(1-p)/scanned.
+    AVG:  x_bar = sum/count,     beta^2 = sample_var/count.
+    ``exact=True`` zeroes the errors (used for ground-truth evaluation).
+    """
+    scanned = jnp.maximum(parts.scanned, 1.0)
+    cnt = parts.count
+    p_hat = cnt / scanned
+    freq_beta2 = p_hat * (1.0 - p_hat) / scanned
+
+    safe_cnt = jnp.maximum(cnt, 1.0)
+    mean = parts.sums / safe_cnt
+    var = jnp.maximum(parts.sumsq / safe_cnt - mean * mean, 0.0)
+    avg_beta2 = var / safe_cnt
+
+    is_avg = snippets.agg == AVG
+    theta = jnp.where(is_avg, mean, p_hat)
+    beta2 = jnp.where(is_avg, avg_beta2, freq_beta2)
+    no_support = is_avg & (cnt < 2)
+    theta = jnp.where(no_support, 0.0, theta)
+    beta2 = jnp.where(no_support, BIG_BETA2, beta2)
+    if exact:
+        beta2 = jnp.zeros_like(beta2)
+    valid = ~no_support
+    return theta, beta2, valid

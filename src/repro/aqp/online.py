@@ -1,0 +1,42 @@
+"""Online aggregation driver (paper §7, deployment scenario 1).
+
+Processes sample batches one at a time, maintaining accumulated partials and
+emitting (raw theta, raw beta^2) after each batch. The Verdict engine wraps
+each emission with model-based improvement and stops as soon as the *improved*
+error meets the target — that early stop is exactly where the paper's speedup
+comes from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.aqp.executor import Partials, estimates_from_partials, eval_partials
+from repro.aqp.sampler import SampleBatches
+from repro.core.types import RawAnswer, SnippetBatch
+
+
+@dataclasses.dataclass
+class OnlineState:
+    partials: Partials
+    batches_used: int = 0
+
+
+def online_answers(
+    batches: SampleBatches,
+    snippets: SnippetBatch,
+    eval_fn: Optional[Callable] = None,
+) -> Iterator[Tuple[RawAnswer, OnlineState]]:
+    """Yields increasingly accurate raw answers after each sample batch."""
+    eval_fn = eval_fn or eval_partials
+    acc = Partials.zeros(snippets.n)
+    used = 0
+    for block in batches:
+        acc = acc + eval_fn(
+            block.num_normalized, block.cat, block.measures, snippets
+        )
+        used += 1
+        theta, beta2, _ = estimates_from_partials(acc, snippets)
+        yield RawAnswer(theta=theta, beta2=beta2), OnlineState(acc, used)

@@ -1,0 +1,70 @@
+"""Columnar relation store.
+
+A (denormalized) relation r with l numeric dimension attributes, c categorical
+dimension attributes and m measure attributes (paper §3.1). Numeric dimensions
+are additionally stored domain-normalized to [0, 1] — the same units snippets,
+lengthscales and the Pallas kernels use.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import Schema
+
+
+@dataclasses.dataclass
+class Relation:
+    schema: Schema
+    num: jnp.ndarray  # (N, l) raw units
+    cat: jnp.ndarray  # (N, c) int32 codes
+    measures: jnp.ndarray  # (N, m) f64
+    num_normalized: jnp.ndarray = None  # (N, l) in [0,1]
+
+    def __post_init__(self):
+        if self.num_normalized is None:
+            lo = jnp.asarray(self.schema.num_lo)
+            hi = jnp.asarray(self.schema.num_hi)
+            self.num_normalized = (self.num - lo) / jnp.maximum(hi - lo, 1e-300)
+
+    @property
+    def cardinality(self) -> int:
+        return int(self.num.shape[0])
+
+    def take(self, rows) -> "Relation":
+        return Relation(
+            schema=self.schema,
+            num=self.num[rows],
+            cat=self.cat[rows],
+            measures=self.measures[rows],
+            num_normalized=self.num_normalized[rows],
+        )
+
+    @staticmethod
+    def from_columns(schema: Schema, num, cat, measures) -> "Relation":
+        return Relation(
+            schema=schema,
+            num=jnp.asarray(num, jnp.float64),
+            cat=jnp.asarray(cat, jnp.int32),
+            measures=jnp.asarray(measures, jnp.float64),
+        )
+
+    def concat(self, other: "Relation") -> "Relation":
+        return Relation(
+            schema=self.schema,
+            num=jnp.concatenate([self.num, other.num]),
+            cat=jnp.concatenate([self.cat, other.cat]),
+            measures=jnp.concatenate([self.measures, other.measures]),
+        )
+
+    def exact_answer(self, snippets):
+        """Ground-truth answers for a SnippetBatch (testing/benchmarks only)."""
+        from repro.aqp.executor import eval_partials, estimates_from_partials
+
+        parts = eval_partials(
+            self.num_normalized, self.cat, self.measures, snippets
+        )
+        theta, beta2, _ = estimates_from_partials(parts, snippets, exact=True)
+        return theta

@@ -1,0 +1,15 @@
+"""Database Learning (Verdict) core: the paper's primary contribution."""
+from repro.core.types import (
+    AVG,
+    FREQ,
+    GPParams,
+    ImprovedAnswer,
+    RawAnswer,
+    Schema,
+    SnippetBatch,
+    make_snippets,
+)
+from repro.core.synopsis import Synopsis
+
+# NOTE: ``repro.core.engine`` (VerdictEngine) is imported lazily by users to
+# avoid a circular import with ``repro.aqp`` (which depends on core.types).

@@ -1,0 +1,57 @@
+"""Data-append generalization (paper Appendix D).
+
+When r^a is appended to r, every past snippet answer computed on r is adjusted
+(Lemma 3):
+
+    theta_i'  = theta_i + f * mu_k          f = |r^a| / (|r| + |r^a|)
+    beta_i'^2 = beta_i^2 + (f * eta_k)^2
+
+where s_k ~ (mu_k, eta_k^2) models the drift of A_k between r and r^a, estimated
+from small samples of both.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class AppendStats:
+    """Per-measure drift statistics plus the append fraction f."""
+
+    mu: np.ndarray  # (m,)
+    eta2: np.ndarray  # (m,)
+    frac: float
+
+
+def estimate_append_stats(old_sample, new_sample, n_old: int, n_new: int) -> AppendStats:
+    """old_sample/new_sample: (k, m) measure samples of r and r^a."""
+    mu_old = np.asarray(old_sample).mean(axis=0)
+    mu_new = np.asarray(new_sample).mean(axis=0)
+    var_old = np.asarray(old_sample).var(axis=0)
+    var_new = np.asarray(new_sample).var(axis=0)
+    k_old = max(len(old_sample), 1)
+    k_new = max(len(new_sample), 1)
+    mu = mu_new - mu_old
+    # Variance of the drift estimate: sampling noise of both means plus the
+    # spread of the appended values themselves (they replace a deterministic
+    # aggregate with a random one).
+    eta2 = var_new + var_old / k_old + var_new / k_new
+    frac = n_new / max(n_old + n_new, 1)
+    return AppendStats(mu=mu, eta2=eta2, frac=frac)
+
+
+def adjust_answers(theta, beta2, measure_idx, agg, stats: AppendStats):
+    """Apply Lemma 3 to past AVG answers (FREQ fractions are unaffected by
+    value drift; COUNT rescaling is handled by cardinality bookkeeping)."""
+    from repro.core.types import AVG
+
+    mu_k = jnp.asarray(stats.mu)[measure_idx]
+    eta2_k = jnp.asarray(stats.eta2)[measure_idx]
+    f = stats.frac
+    is_avg = agg == AVG
+    theta_new = jnp.where(is_avg, theta + f * mu_k, theta)
+    beta2_new = jnp.where(is_avg, beta2 + (f**2) * eta2_k, beta2)
+    return theta_new, beta2_new

@@ -1,0 +1,144 @@
+"""Analytic inter-tuple covariance aggregation (paper §4, Appendix F).
+
+The covariance between two snippet answers decomposes into a product over
+dimension attributes (Eq. 10 / Eq. 16):
+
+  cov(th_i, th_j) = sigma_g^2
+      * prod_{k in numeric}  II_k(i, j)          (double integral of SE kernel)
+      * prod_{k in categorical} |F_ik ∩ F_jk|    (membership overlap)
+
+with AVG answers normalized by the predicate-region size |F_i||F_j| (the paper
+"omits normalization terms"; Appendix F.3's mu estimators imply exactly this
+normalization, which makes the model unit-consistent across range sizes).
+
+Everything here is pure jnp (the oracle); ``repro.kernels.se_covariance`` is the
+Pallas TPU kernel for the numeric-factor hot loop, validated against this module.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import erf
+
+from repro.core.types import AVG, GPParams, Schema, SnippetBatch
+
+# Widening for degenerate (equality) numeric ranges, in normalized units.
+EPS_WIDTH = 1e-6
+SQRT_PI = 1.7724538509055159
+
+
+def _antideriv(u, z):
+    """F(u) with u = x - y: d^2F/dxdy = exp(-u^2/z^2) (Appendix F.1)."""
+    return -0.5 * z * z * jnp.exp(-((u / z) ** 2)) - 0.5 * SQRT_PI * z * u * erf(u / z)
+
+
+def se_double_integral(a, b, c, d, z):
+    """∫_a^b ∫_c^d exp(-(x-y)^2/z^2) dy dx, elementwise/broadcast.
+
+    Closed form by inclusion-exclusion of the antiderivative (Appendix F.1).
+    """
+    return _antideriv(b - d, z) - _antideriv(b - c, z) - _antideriv(a - d, z) + _antideriv(a - c, z)
+
+
+def widened(lo, hi):
+    """Equality predicates arrive as zero-width ranges; widen to EPS_WIDTH."""
+    w = jnp.maximum(hi - lo, EPS_WIDTH)
+    return lo, lo + w, w
+
+
+def numeric_factors(bi: SnippetBatch, bj: SnippetBatch, params: GPParams):
+    """(n_i, n_j) product over numeric dims of the SE double integrals.
+
+    Returns (raw_product, vol_i, vol_j): ``raw_product`` is the unnormalized
+    ∏_k II_k; volumes are ∏_k width for AVG normalization.
+    """
+    lo_i, hi_i, w_i = widened(bi.lo, bi.hi)  # (n_i, l)
+    lo_j, hi_j, w_j = widened(bj.lo, bj.hi)  # (n_j, l)
+    z = params.ls  # (l,)
+    g = se_double_integral(
+        lo_i[:, None, :], hi_i[:, None, :], lo_j[None, :, :], hi_j[None, :, :], z
+    )  # (n_i, n_j, l)
+    # The SE integral is mathematically positive; clamp fp rounding.
+    g = jnp.maximum(g, 0.0)
+    return jnp.prod(g, axis=-1), jnp.prod(w_i, axis=-1), jnp.prod(w_j, axis=-1)
+
+
+def categorical_factors(bi: SnippetBatch, bj: SnippetBatch):
+    """(n_i, n_j) ∏_k |F_ik ∩ F_jk| and the per-snippet counts ∏_k |F_ik|."""
+    if bi.cat.shape[1] == 0:
+        n_i, n_j = bi.lo.shape[0], bj.lo.shape[0]
+        return jnp.ones((n_i, n_j)), jnp.ones((n_i,)), jnp.ones((n_j,))
+    ci = bi.cat.astype(jnp.float64)
+    cj = bj.cat.astype(jnp.float64)
+    overlap = jnp.einsum("ikv,jkv->ijk", ci, cj)  # (n_i, n_j, c)
+    counts_i = jnp.prod(jnp.sum(ci, axis=-1), axis=-1)
+    counts_j = jnp.prod(jnp.sum(cj, axis=-1), axis=-1)
+    return jnp.prod(overlap, axis=-1), counts_i, counts_j
+
+
+def region_size(b: SnippetBatch):
+    """|F_i| = numeric volume × categorical count (normalized units)."""
+    _, _, w = widened(b.lo, b.hi)
+    vol = jnp.prod(w, axis=-1)
+    if b.cat.shape[1] > 0:
+        vol = vol * jnp.prod(jnp.sum(b.cat.astype(jnp.float64), axis=-1), axis=-1)
+    return vol
+
+
+def cov_matrix(bi: SnippetBatch, bj: SnippetBatch, params: GPParams):
+    """cov(exact answers) between two snippet batches: (n_i, n_j).
+
+    Assumes both batches share one aggregate function g (Section 3.1 WLOG).
+    """
+    num, vol_i, vol_j = numeric_factors(bi, bj, params)
+    cat, cnt_i, cnt_j = categorical_factors(bi, bj)
+    raw = params.sigma2 * num * cat
+    # AVG: normalize by |F_i| |F_j| (integral -> mean); FREQ: leave as integral.
+    is_avg_i = (bi.agg == AVG).astype(jnp.float64)
+    is_avg_j = (bj.agg == AVG).astype(jnp.float64)
+    norm_i = jnp.where(is_avg_i > 0, vol_i * cnt_i, 1.0)
+    norm_j = jnp.where(is_avg_j > 0, vol_j * cnt_j, 1.0)
+    return raw / (norm_i[:, None] * norm_j[None, :])
+
+
+def cov_diag(b: SnippetBatch, params: GPParams):
+    """Prior variance kappa_bar^2 of each snippet's exact answer: (n,)."""
+    lo, hi, w = widened(b.lo, b.hi)
+    z = params.ls
+    g = jnp.maximum(se_double_integral(lo, hi, lo, hi, z), 0.0)  # (n, l)
+    num = jnp.prod(g, axis=-1)
+    vol = jnp.prod(w, axis=-1)
+    if b.cat.shape[1] > 0:
+        counts = jnp.prod(jnp.sum(b.cat.astype(jnp.float64), axis=-1), axis=-1)
+    else:
+        counts = jnp.ones_like(vol)
+    raw = params.sigma2 * num * counts
+    is_avg = (b.agg == AVG).astype(jnp.float64)
+    norm = jnp.where(is_avg > 0, (vol * counts) ** 2, 1.0)
+    return raw / norm
+
+
+def prior_mean(b: SnippetBatch, params: GPParams):
+    """Prior mean per snippet (Appendix F.3): AVG -> mu; FREQ -> mu * |F_i|."""
+    size = region_size(b)
+    is_avg = (b.agg == AVG).astype(jnp.float64)
+    return jnp.where(is_avg > 0, params.mu, params.mu * size)
+
+
+def analytic_sigma2_mu(b: SnippetBatch, theta):
+    """Analytic estimates of (sigma_g^2, mu) from past answers (Appendix F.3)."""
+    size = region_size(b)
+    is_avg = b.agg == AVG
+    dens = jnp.where(is_avg, theta, theta / size)
+    mu = jnp.mean(dens)
+    sigma2 = jnp.maximum(jnp.var(dens), 1e-12)
+    return sigma2, mu
+
+
+def cross_cov_with_raw(bi, bj, params, beta2_j):
+    """cov(theta_bar_i, raw theta_j) == cov of exact answers (Eq. 6, off-diag)."""
+    return cov_matrix(bi, bj, params)
+
+
+cov_matrix_jit = jax.jit(cov_matrix)
+cov_diag_jit = jax.jit(cov_diag)

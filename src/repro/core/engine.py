@@ -1,0 +1,239 @@
+"""VerdictEngine: the end-to-end DBL query engine (paper Figure 2, Algorithm 2).
+
+Workflow per query:
+  1. support check (§2.2) — unsupported queries bypass inference entirely;
+  2. decompose into snippets (§2.3), discovering group-by values from the
+     first sample batch;
+  3. online aggregation over sample batches; after each batch the raw
+     answers are improved via the per-aggregate-function synopsis model and
+     validated (Appendix B); stop early once the improved error bound meets
+     the target — the source of the paper's speedups;
+  4. insert the final raw answers into the synopsis (the model learns from
+     *raw* answers, never from its own outputs).
+
+``learning=False`` turns the engine into the NoLearn baseline of §8.1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.aqp import queries as Q
+from repro.aqp.executor import estimates_from_partials, eval_partials, Partials
+from repro.aqp.relation import Relation
+from repro.aqp.sampler import SampleBatches, build_sample
+from repro.core.synopsis import Synopsis
+from repro.core.types import (
+    AVG,
+    FREQ,
+    ImprovedAnswer,
+    RawAnswer,
+    Schema,
+    SnippetBatch,
+)
+from repro.utils.stats import confidence_multiplier
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    sample_rate: float = 0.1
+    n_batches: int = 10
+    capacity: int = 2000  # C_g
+    n_max: int = 1000  # N^max
+    delta_v: float = 0.99
+    report_delta: float = 0.95
+    learning: bool = True
+    seed: int = 0
+    use_kernels: bool = False  # route hot paths through the Pallas kernels
+
+
+@dataclasses.dataclass
+class QueryResult:
+    cells: List[dict]
+    batches_used: int
+    tuples_scanned: int
+    supported: bool
+    unsupported_reason: Optional[str] = None
+    snippet_answer: Optional[ImprovedAnswer] = None
+    plan: Optional[Q.SnippetPlan] = None
+
+    def max_rel_error(self, delta: float = 0.95) -> float:
+        alpha = float(confidence_multiplier(delta))
+        worst = 0.0
+        for c in self.cells:
+            denom = max(abs(c["estimate"]), 1e-9)
+            worst = max(worst, alpha * np.sqrt(c["beta2"]) / denom)
+        return worst
+
+
+class VerdictEngine:
+    def __init__(self, relation: Relation, config: Optional[EngineConfig] = None):
+        self.relation = relation
+        self.schema: Schema = relation.schema
+        self.config = config or EngineConfig()
+        self.batches: SampleBatches = build_sample(
+            relation,
+            rate=self.config.sample_rate,
+            n_batches=self.config.n_batches,
+            seed=self.config.seed,
+        )
+        self.synopses: Dict[Tuple[int, int], Synopsis] = {}
+        self._eval_fn = eval_partials
+        if self.config.use_kernels:
+            from repro.kernels.range_mask_agg import ops as rma_ops
+
+            self._eval_fn = rma_ops.eval_partials_kernel
+
+    # ------------------------------------------------------------- synopses
+    def synopsis_for(self, agg: int, measure: int) -> Synopsis:
+        key = (int(agg), int(measure) if agg == AVG else 0)
+        if key not in self.synopses:
+            self.synopses[key] = Synopsis(
+                self.schema, capacity=self.config.capacity, delta_v=self.config.delta_v
+            )
+        return self.synopses[key]
+
+    def refit(self, steps: int = 150, lr: float = 0.1, learn_sigma: bool = False):
+        """Offline learning pass (paper Algorithm 1)."""
+        for syn in self.synopses.values():
+            syn.refit(steps=steps, lr=lr, learn_sigma=learn_sigma)
+
+    # ------------------------------------------------------------ improve
+    def _improve(self, snippets: SnippetBatch, raw: RawAnswer) -> ImprovedAnswer:
+        """Per-aggregate-function improvement, scattered back to query order."""
+        agg = np.asarray(snippets.agg)
+        mea = np.asarray(snippets.measure)
+        theta = np.array(np.asarray(raw.theta))
+        beta2 = np.array(np.asarray(raw.beta2))
+        out_theta = theta.copy()
+        out_beta2 = beta2.copy()
+        accepted = np.zeros(len(agg), dtype=bool)
+        for key in {(int(a), int(m) if a == AVG else 0) for a, m in zip(agg, mea)}:
+            rows = np.where(
+                (agg == key[0]) & ((mea == key[1]) if key[0] == AVG else True)
+            )[0]
+            syn = self.synopsis_for(*key)
+            sub = snippets[jnp.asarray(rows)]
+            imp = syn.improve(
+                sub, RawAnswer(jnp.asarray(theta[rows]), jnp.asarray(beta2[rows]))
+            )
+            out_theta[rows] = np.asarray(imp.theta)
+            out_beta2[rows] = np.asarray(imp.beta2)
+            accepted[rows] = np.asarray(imp.accepted)
+        return ImprovedAnswer(
+            theta=jnp.asarray(out_theta),
+            beta2=jnp.asarray(out_beta2),
+            raw_theta=raw.theta,
+            raw_beta2=raw.beta2,
+            accepted=jnp.asarray(accepted),
+        )
+
+    def _record(self, snippets: SnippetBatch, raw: RawAnswer):
+        agg = np.asarray(snippets.agg)
+        mea = np.asarray(snippets.measure)
+        for key in {(int(a), int(m) if a == AVG else 0) for a, m in zip(agg, mea)}:
+            rows = np.where(
+                (agg == key[0]) & ((mea == key[1]) if key[0] == AVG else True)
+            )[0]
+            syn = self.synopsis_for(*key)
+            sub = snippets[jnp.asarray(rows)]
+            syn.add(sub, np.asarray(raw.theta)[rows], np.asarray(raw.beta2)[rows])
+
+    # ------------------------------------------------------------- groups
+    def _discover_groups(self, q: Q.AggQuery):
+        if not q.groupby:
+            return ((),)
+        first = self.batches.relation.take(self.batches.batch_rows[0])
+        plan_probe = Q.decompose(self.schema, Q.AggQuery(aggs=(Q.AggSpec("COUNT"),), predicates=q.predicates))
+        from repro.aqp.executor import predicate_mask
+
+        mask = np.asarray(
+            predicate_mask(first.num_normalized, first.cat, plan_probe.snippets)
+        )[:, 0].astype(bool)
+        cats = np.asarray(first.cat)[mask][:, list(q.groupby)]
+        if cats.size == 0:
+            return ((),) if not q.groupby else tuple()
+        uniq = np.unique(cats, axis=0)
+        return tuple(tuple(int(v) for v in row) for row in uniq)
+
+    # ------------------------------------------------------------- execute
+    def execute(
+        self,
+        q: Q.AggQuery,
+        target_rel_error: Optional[float] = None,
+        max_batches: Optional[int] = None,
+    ) -> QueryResult:
+        reason = Q.unsupported_reason(q)
+        max_batches = max_batches or self.batches.n_batches
+        if reason is not None:
+            return self._execute_raw_only(q, reason, max_batches)
+
+        groups = self._discover_groups(q)
+        if not groups:
+            return QueryResult([], 0, 0, True, plan=None)
+        plan = Q.decompose(self.schema, q, groups, n_max=self.config.n_max)
+        acc = Partials.zeros(plan.snippets.n)
+        used = 0
+        improved = None
+        raw = None
+        for rows in self.batches.batch_rows[:max_batches]:
+            block = self.batches.relation.take(rows)
+            acc = acc + self._eval_fn(
+                block.num_normalized, block.cat, block.measures, plan.snippets
+            )
+            used += 1
+            theta, beta2, _ = estimates_from_partials(acc, plan.snippets)
+            raw = RawAnswer(theta, beta2)
+            if self.config.learning:
+                improved = self._improve(plan.snippets, raw)
+            else:
+                improved = ImprovedAnswer(
+                    theta, beta2, theta, beta2, jnp.zeros((plan.snippets.n,), bool)
+                )
+            if target_rel_error is not None:
+                cells = Q.assemble_results(
+                    plan, improved.theta, improved.beta2, self.batches.source_cardinality
+                )
+                res = QueryResult(cells, used, self._tuples(used), True,
+                                  snippet_answer=improved, plan=plan)
+                if res.max_rel_error(self.config.report_delta) <= target_rel_error:
+                    if self.config.learning:
+                        self._record(plan.snippets, raw)
+                    return res
+        cells = Q.assemble_results(
+            plan, improved.theta, improved.beta2, self.batches.source_cardinality
+        )
+        if self.config.learning and raw is not None:
+            self._record(plan.snippets, raw)
+        return QueryResult(cells, used, self._tuples(used), True,
+                           snippet_answer=improved, plan=plan)
+
+    def _tuples(self, used_batches: int) -> int:
+        return int(sum(len(b) for b in self.batches.batch_rows[:used_batches]))
+
+    def _execute_raw_only(self, q, reason, max_batches):
+        """Unsupported queries: raw AQP answers, no learning (paper §2.2)."""
+        supported_aggs = tuple(
+            a for a in q.aggs if a.kind in Q.SUPPORTED_KINDS
+        ) or (Q.AggSpec("COUNT", None),)
+        clean_preds = tuple(
+            p for p in q.predicates
+            if not isinstance(p, (Q.Disjunction, Q.TextLike))
+        )
+        probe = Q.AggQuery(aggs=supported_aggs, predicates=clean_preds, groupby=q.groupby)
+        groups = self._discover_groups(probe)
+        plan = Q.decompose(self.schema, probe, groups, n_max=self.config.n_max)
+        acc = Partials.zeros(plan.snippets.n)
+        used = 0
+        for rows in self.batches.batch_rows[:max_batches]:
+            block = self.batches.relation.take(rows)
+            acc = acc + eval_partials(
+                block.num_normalized, block.cat, block.measures, plan.snippets
+            )
+            used += 1
+        theta, beta2, _ = estimates_from_partials(acc, plan.snippets)
+        cells = Q.assemble_results(plan, theta, beta2, self.batches.source_cardinality)
+        return QueryResult(cells, used, self._tuples(used), False, reason, plan=plan)

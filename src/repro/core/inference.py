@@ -1,0 +1,82 @@
+"""Verdict inference: the most-likely answer to a new snippet (paper §3, §5).
+
+We use the O(n^2) block forms of Eq. (11)/(12):
+
+    gamma^2   = kappa_bar^2 - k_n^T Sigma_n^{-1} k_n
+    theta_pri = mu_new + k_n^T Sigma_n^{-1} (theta_n - mu_n)
+    theta_dd  = (beta^2 * theta_pri + gamma^2 * theta_raw) / (beta^2 + gamma^2)
+    beta_dd^2 = (beta^2 * gamma^2) / (beta^2 + gamma^2)
+
+Sigma_n carries past raw-answer covariances (exact-answer cov + beta_i^2 on the
+diagonal, Eq. 6). All functions are batched over Q new snippets and padded to a
+fixed synopsis capacity so the serving path compiles exactly once:
+padding rows have k = 0, Sigma^{-1} = I and alpha = 0, which leaves every
+product untouched (verified by a padding-invariance property test).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.linalg import solve_triangular
+
+GAMMA_FLOOR = 1e-30
+
+
+def factorize(sigma_n, jitter: float = 1e-10):
+    """Cholesky of the past-answer covariance (adds jitter on the diagonal)."""
+    n = sigma_n.shape[0]
+    return jnp.linalg.cholesky(sigma_n + jitter * jnp.eye(n, dtype=sigma_n.dtype))
+
+
+def chol_append_row(chol, new_col, new_diag, jitter: float = 1e-10):
+    """O(n^2) Cholesky update appending one row/col to Sigma_n.
+
+    chol: (n, n) lower factor; new_col: (n,) cov vs existing; new_diag: scalar.
+    Returns (n+1, n+1) factor.
+    """
+    n = chol.shape[0]
+    w = solve_triangular(chol, new_col, lower=True) if n else jnp.zeros((0,), chol.dtype)
+    d = jnp.sqrt(jnp.maximum(new_diag + jitter - jnp.sum(w * w), jitter))
+    out = jnp.zeros((n + 1, n + 1), chol.dtype)
+    out = out.at[:n, :n].set(chol)
+    out = out.at[n, :n].set(w)
+    out = out.at[n, n].set(d)
+    return out
+
+
+def inverse_from_chol(chol):
+    eye = jnp.eye(chol.shape[0], dtype=chol.dtype)
+    inv_l = solve_triangular(chol, eye, lower=True)
+    return inv_l.T @ inv_l
+
+
+def gp_posterior(k_mat, kappa2, sigma_inv, alpha, mu_new):
+    """Model prior predictive for Q new snippets given n past raw answers.
+
+    k_mat: (Q, n); kappa2: (Q,); sigma_inv: (n, n); alpha = Sigma^{-1} resid (n,).
+    Returns (theta_prior (Q,), gamma2 (Q,)).
+    """
+    t = k_mat @ sigma_inv  # (Q, n)
+    gamma2 = kappa2 - jnp.sum(t * k_mat, axis=-1)
+    gamma2 = jnp.maximum(gamma2, GAMMA_FLOOR)
+    theta_prior = mu_new + k_mat @ alpha
+    return theta_prior, gamma2
+
+
+def combine(theta_prior, gamma2, raw_theta, raw_beta2):
+    """Product-of-Gaussians blend (Eq. 12). Handles beta^2 = 0 (exact raw)."""
+    denom = raw_beta2 + gamma2
+    theta = (raw_beta2 * theta_prior + gamma2 * raw_theta) / denom
+    beta2 = raw_beta2 * gamma2 / denom
+    exact = raw_beta2 <= 0.0
+    theta = jnp.where(exact, raw_theta, theta)
+    beta2 = jnp.where(exact, 0.0, beta2)
+    return theta, beta2
+
+
+@jax.jit
+def model_based_answer(k_mat, kappa2, sigma_inv, alpha, mu_new, raw_theta, raw_beta2):
+    """Full Eq. 11+12 pipeline, batched; returns (theta_dd, beta2_dd, gamma2)."""
+    theta_prior, gamma2 = gp_posterior(k_mat, kappa2, sigma_inv, alpha, mu_new)
+    theta, beta2 = combine(theta_prior, gamma2, raw_theta, raw_beta2)
+    return theta, beta2, gamma2

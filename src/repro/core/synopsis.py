@@ -1,0 +1,378 @@
+"""Query synopsis: bounded store of past snippets + incremental model state.
+
+Paper §2.3: per aggregate function g the synopsis retains at most C_g snippets
+(LRU replacement). The covariance matrix Sigma_n (raw-answer covariances) and
+its inverse are maintained *incrementally* in O(n^2) per insert/evict using the
+block matrix-inversion lemma — the same identity the paper's Theorem 1 proof
+uses — with a periodic full refactor to bound numerical drift.
+
+The serving path (``improve``) runs against device-resident buffers padded to
+capacity, so one jitted program serves every synopsis fill level.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import covariance, inference, learning, validation
+from repro.core.types import (
+    FREQ,
+    GPParams,
+    ImprovedAnswer,
+    RawAnswer,
+    Schema,
+    SnippetBatch,
+)
+
+REFACTOR_EVERY = 128  # full O(n^3) rebuild cadence (numerical hygiene)
+JITTER = 1e-10
+
+
+def inv_append_row(ainv, col, diag, jitter=JITTER):
+    """O(n^2) inverse update appending one row/col (matrix inversion lemma)."""
+    u = ainv @ col
+    s = jnp.maximum(diag + jitter - col @ u, jitter)
+    n = ainv.shape[0]
+    out = jnp.zeros((n + 1, n + 1), ainv.dtype)
+    out = out.at[:n, :n].set(ainv + jnp.outer(u, u) / s)
+    out = out.at[:n, n].set(-u / s)
+    out = out.at[n, :n].set(-u / s)
+    out = out.at[n, n].set(1.0 / s)
+    return out
+
+
+def inv_delete_row(ainv, r):
+    """O(n^2) inverse update deleting row/col r."""
+    n = ainv.shape[0]
+    keep = np.r_[0:r, r + 1 : n]
+    a = ainv[np.ix_(keep, keep)]
+    b = ainv[keep, r]
+    d = ainv[r, r]
+    return a - jnp.outer(b, b) / d
+
+
+@jax.jit
+def _improve_padded(
+    past: SnippetBatch,
+    valid,
+    sigma_inv,
+    alpha,
+    params: GPParams,
+    new: SnippetBatch,
+    raw_theta,
+    raw_beta2,
+    delta_v,
+):
+    k_mat = covariance.cov_matrix(new, past, params) * valid[None, :]
+    kappa2 = covariance.cov_diag(new, params)
+    mu_new = covariance.prior_mean(new, params)
+    model_theta, model_beta2, gamma2 = inference.model_based_answer(
+        k_mat, kappa2, sigma_inv, alpha, mu_new, raw_theta, raw_beta2
+    )
+    theta, beta2, accepted = validation.validate(
+        new.agg, model_theta, model_beta2, raw_theta, raw_beta2, delta_v
+    )
+    return theta, beta2, accepted
+
+
+class Synopsis:
+    """Bounded per-aggregate-function snippet store + incremental GP state."""
+
+    def __init__(
+        self,
+        schema: Schema,
+        capacity: int = 2000,
+        delta_v: float = 0.99,
+        params: Optional[GPParams] = None,
+    ):
+        self.schema = schema
+        self.capacity = int(capacity)
+        self.delta_v = float(delta_v)
+        l, c, v = schema.n_num, schema.n_cat, max(schema.cat_vmax, 1)
+        C = self.capacity
+        self._lo = np.zeros((C, l))
+        self._hi = np.ones((C, l))
+        self._cat = np.ones((C, c, v), dtype=bool)
+        self._agg = np.full((C,), FREQ, np.int32)
+        self._measure = np.zeros((C,), np.int32)
+        self._theta = np.zeros((C,))
+        self._beta2 = np.ones((C,))
+        self._stamp = np.full((C,), -1, np.int64)
+        self.n = 0
+        self._clock = 0
+        self._keys: dict = {}
+        self.params = params or GPParams.init(schema)
+        self._sigma = np.zeros((C, C))
+        self._sigma_inv = jnp.zeros((0, 0))
+        self._alpha = jnp.zeros((0,))
+        self._updates_since_refactor = 0
+        self._order: list = []  # row ids in Sigma^{-1} ordering
+        self._device_state = None  # padded buffers for the jitted serve path
+
+    # ---------------------------------------------------------------- storage
+    def _row_batch(self, rows) -> SnippetBatch:
+        return SnippetBatch(
+            lo=jnp.asarray(self._lo[rows]),
+            hi=jnp.asarray(self._hi[rows]),
+            cat=jnp.asarray(self._cat[rows]),
+            agg=jnp.asarray(self._agg[rows]),
+            measure=jnp.asarray(self._measure[rows]),
+        )
+
+    def active(self) -> SnippetBatch:
+        return self._row_batch(np.arange(self.n))
+
+    def theta(self):
+        return jnp.asarray(self._theta[: self.n])
+
+    def beta2(self):
+        return jnp.asarray(self._beta2[: self.n])
+
+    @staticmethod
+    def _key(lo, hi, cat, agg, measure):
+        return hash(
+            (lo.tobytes(), hi.tobytes(), cat.tobytes(), int(agg), int(measure))
+        )
+
+    # ----------------------------------------------------------------- insert
+    def add(self, snippets: SnippetBatch, theta, beta2):
+        """Insert raw answers; duplicates refresh LRU stamps and keep the more
+        accurate answer. O(n^2) per genuinely-new snippet."""
+        lo = np.asarray(snippets.lo)
+        hi = np.asarray(snippets.hi)
+        cat = np.asarray(snippets.cat)
+        agg = np.asarray(snippets.agg)
+        mea = np.asarray(snippets.measure)
+        theta = np.asarray(theta)
+        beta2 = np.asarray(beta2)
+        for i in range(lo.shape[0]):
+            if not (np.isfinite(theta[i]) and np.isfinite(beta2[i])):
+                continue
+            key = self._key(lo[i], hi[i], cat[i], agg[i], mea[i])
+            self._clock += 1
+            if key in self._keys:
+                r = self._keys[key]
+                self._stamp[r] = self._clock
+                if beta2[i] < self._beta2[r]:
+                    self._theta[r] = theta[i]
+                    self._replace_beta(r, beta2[i])
+                continue
+            if self.n < self.capacity:
+                r = self.n
+                self.n += 1
+            else:
+                r = int(np.argmin(self._stamp[: self.n]))  # LRU eviction
+                old_key = self._key(
+                    self._lo[r], self._hi[r], self._cat[r], self._agg[r], self._measure[r]
+                )
+                self._keys.pop(old_key, None)
+                self._delete_from_model(r)
+            self._lo[r] = lo[i]
+            self._hi[r] = hi[i]
+            self._cat[r] = cat[i]
+            self._agg[r] = agg[i]
+            self._measure[r] = mea[i]
+            self._theta[r] = theta[i]
+            self._beta2[r] = beta2[i]
+            self._stamp[r] = self._clock
+            self._keys[key] = r
+            self._insert_into_model(r)
+        self._refresh_alpha()
+        self._device_state = None
+
+    def _replace_beta(self, r, new_beta2):
+        """Diagonal-only change: redo row r in the model (delete+insert)."""
+        self._delete_from_model(r, already_removed_row=False)
+        self._beta2[r] = new_beta2
+        self._insert_into_model(r)
+
+    # ------------------------------------------------------ incremental model
+    def _cov_against_active(self, r, rows):
+        one = self._row_batch(np.array([r]))
+        if len(rows) == 0:
+            col = np.zeros((0,))
+        else:
+            others = self._row_batch(np.asarray(rows))
+            col = np.asarray(covariance.cov_matrix_jit(one, others, self.params))[0]
+        diag = float(np.asarray(covariance.cov_diag_jit(one, self.params))[0]) + float(
+            self._beta2[r]
+        )
+        return col, diag
+
+    def _insert_into_model(self, r):
+        """Row r was just written at position n-1 OR replaces an evicted slot.
+
+        The inverse is maintained over the *ordering* [active rows]; we keep a
+        permutation-free scheme by always appending logically: position in the
+        inverse == position in ``self._order``.
+        """
+        if not hasattr(self, "_order"):
+            self._order = []
+        rows = [x for x in self._order]
+        col, diag = self._cov_against_active(r, rows)
+        self._sigma[r, rows] = col
+        self._sigma[rows, r] = col
+        self._sigma[r, r] = diag
+        self._updates_since_refactor += 1
+        if self._updates_since_refactor >= REFACTOR_EVERY:
+            self._order.append(r)
+            self._refactor()
+            return
+        self._sigma_inv = inv_append_row(
+            self._sigma_inv, jnp.asarray(col), jnp.asarray(diag)
+        )
+        self._order.append(r)
+
+    def _delete_from_model(self, r, already_removed_row=True):
+        if r not in getattr(self, "_order", []):
+            return
+        pos = self._order.index(r)
+        self._sigma_inv = inv_delete_row(self._sigma_inv, pos)
+        self._order.pop(pos)
+        self._updates_since_refactor += 1
+
+    def _refactor(self):
+        """Full O(n^3) rebuild of Sigma^{-1} from Sigma (numerical hygiene)."""
+        rows = np.asarray(self._order, dtype=np.int64)
+        if len(rows) == 0:
+            self._sigma_inv = jnp.zeros((0, 0))
+            self._updates_since_refactor = 0
+            return
+        sig = jnp.asarray(self._sigma[np.ix_(rows, rows)])
+        chol = inference.factorize(sig, JITTER)
+        self._sigma_inv = inference.inverse_from_chol(chol)
+        self._updates_since_refactor = 0
+
+    def _refresh_alpha(self):
+        rows = np.asarray(getattr(self, "_order", []), dtype=np.int64)
+        if len(rows) == 0:
+            self._alpha = jnp.zeros((0,))
+            return
+        batch = self._row_batch(rows)
+        resid = jnp.asarray(self._theta[rows]) - covariance.prior_mean(batch, self.params)
+        self._alpha = self._sigma_inv @ resid
+
+    # ------------------------------------------------------------------ refit
+    def refit(self, steps: int = 150, lr: float = 0.1, learn_sigma: bool = False):
+        """Offline learning (Appendix A): relearn params, rebuild the model."""
+        if self.n < 3:
+            return self.params
+        rows = np.asarray(self._order, dtype=np.int64)
+        batch = self._row_batch(rows)
+        theta = jnp.asarray(self._theta[rows])
+        beta2 = jnp.asarray(self._beta2[rows])
+        self.params, _ = learning.fit(
+            batch, theta, beta2, self.schema, steps=steps, lr=lr, learn_sigma=learn_sigma
+        )
+        self.rebuild()
+        return self.params
+
+    def rebuild(self):
+        """Recompute Sigma for the current params, refactor, refresh alpha."""
+        rows = np.asarray(getattr(self, "_order", []), dtype=np.int64)
+        if len(rows):
+            batch = self._row_batch(rows)
+            sig = np.array(covariance.cov_matrix_jit(batch, batch, self.params))
+            sig[np.diag_indices(len(rows))] = np.asarray(
+                covariance.cov_diag_jit(batch, self.params)
+            ) + self._beta2[rows]
+            self._sigma[np.ix_(rows, rows)] = sig
+        self._refactor()
+        self._refresh_alpha()
+        self._device_state = None
+
+    # ------------------------------------------------------------------ serve
+    def _padded_state(self):
+        """Device-resident buffers padded to capacity for the jitted hot path."""
+        if self._device_state is not None:
+            return self._device_state
+        C = self.capacity
+        rows = np.asarray(getattr(self, "_order", []), dtype=np.int64)
+        n = len(rows)
+        idx = np.concatenate([rows, np.zeros((C - n,), np.int64)])
+        past = self._row_batch(idx)
+        valid = jnp.asarray(np.arange(C) < n, jnp.float64)
+        sinv = np.eye(C)
+        if n:
+            sinv[:n, :n] = np.asarray(self._sigma_inv)
+        alpha = np.zeros((C,))
+        alpha[:n] = np.asarray(self._alpha)
+        self._device_state = (past, valid, jnp.asarray(sinv), jnp.asarray(alpha))
+        return self._device_state
+
+    def improve(self, new: SnippetBatch, raw: RawAnswer) -> ImprovedAnswer:
+        """Improved answers for a batch of new snippets (Algorithm 2 lines 3-7)."""
+        if self.n == 0:
+            # Empty synopsis: Theorem 1's equality case — return raw unchanged.
+            acc = jnp.zeros((new.n,), bool)
+            return ImprovedAnswer(raw.theta, raw.beta2, raw.theta, raw.beta2, acc)
+        past, valid, sinv, alpha = self._padded_state()
+        theta, beta2, accepted = _improve_padded(
+            past, valid, sinv, alpha, self.params, new, raw.theta, raw.beta2,
+            self.delta_v,
+        )
+        return ImprovedAnswer(theta, beta2, raw.theta, raw.beta2, accepted)
+
+    # ------------------------------------------------------------- append (D)
+    def apply_append(self, stats):
+        """Adjust all stored answers for appended data (Appendix D, Lemma 3)."""
+        from repro.core.append import adjust_answers
+
+        if self.n == 0:
+            return
+        rows = np.arange(self.n)
+        theta, beta2 = adjust_answers(
+            jnp.asarray(self._theta[rows]),
+            jnp.asarray(self._beta2[rows]),
+            jnp.asarray(self._measure[rows]),
+            jnp.asarray(self._agg[rows]),
+            stats,
+        )
+        self._theta[rows] = np.asarray(theta)
+        self._beta2[rows] = np.asarray(beta2)
+        self.rebuild()
+
+    # ------------------------------------------------------------ persistence
+    def state_dict(self):
+        return {
+            "lo": self._lo[: self.n],
+            "hi": self._hi[: self.n],
+            "cat": self._cat[: self.n],
+            "agg": self._agg[: self.n],
+            "measure": self._measure[: self.n],
+            "theta": self._theta[: self.n],
+            "beta2": self._beta2[: self.n],
+            "stamp": self._stamp[: self.n],
+            "order": np.asarray(getattr(self, "_order", []), np.int64),
+            "log_ls": np.asarray(self.params.log_ls),
+            "log_sigma2": np.asarray(self.params.log_sigma2),
+            "mu": np.asarray(self.params.mu),
+        }
+
+    def load_state_dict(self, state):
+        n = state["lo"].shape[0]
+        self.n = n
+        self._lo[:n] = state["lo"]
+        self._hi[:n] = state["hi"]
+        self._cat[:n] = state["cat"]
+        self._agg[:n] = state["agg"]
+        self._measure[:n] = state["measure"]
+        self._theta[:n] = state["theta"]
+        self._beta2[:n] = state["beta2"]
+        self._stamp[:n] = state["stamp"]
+        self._order = [int(x) for x in state["order"]]
+        self.params = GPParams(
+            log_ls=jnp.asarray(state["log_ls"]),
+            log_sigma2=jnp.asarray(state["log_sigma2"]),
+            mu=jnp.asarray(state["mu"]),
+        )
+        self._keys = {
+            self._key(self._lo[i], self._hi[i], self._cat[i], self._agg[i], self._measure[i]): i
+            for i in range(n)
+        }
+        self._clock = int(self._stamp[:n].max()) if n else 0
+        self.rebuild()

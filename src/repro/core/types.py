@@ -1,0 +1,234 @@
+"""Core types for Database Learning (Verdict).
+
+The unit of inference is the *query snippet* (paper Definition 1): a supported
+aggregate query whose answer is a single scalar.  Snippets are stored as a
+struct-of-arrays ``SnippetBatch`` so that covariance construction, inference and
+aggregation are all vectorized / JIT-able.
+
+Numeric predicate ranges are normalized to the attribute domain ([0, 1] per
+dimension) at ingestion: lengthscales, volumes and the SE double integrals then
+operate in well-conditioned units (a beyond-paper numerical hardening; the paper
+works in raw attribute units inside Matlab's f64).
+"""
+from __future__ import annotations
+
+import jax
+
+# Verdict's core math runs in float64: the closed-form double integral of the SE
+# kernel is an inclusion-exclusion of 4 antiderivative terms whose difference is
+# O(width^2) — catastrophic cancellation in f32 for narrow predicates.
+jax.config.update("jax_enable_x64", True)
+
+import dataclasses  # noqa: E402
+from typing import Tuple  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.utils.pytree import pytree_dataclass  # noqa: E402
+
+AVG = 0
+FREQ = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Static description of the (denormalized) relation the engine serves.
+
+    ``num_lo/num_hi``: domain bounds of the ``l`` numeric dimension attributes.
+    ``cat_sizes``: domain cardinality of each of the ``c`` categorical dimension
+    attributes; ``cat_vmax`` is the padded one-hot width (>= max(cat_sizes)).
+    ``n_measures``: number of measure attributes (AVG targets).
+    """
+
+    num_lo: Tuple[float, ...]
+    num_hi: Tuple[float, ...]
+    cat_sizes: Tuple[int, ...]
+    n_measures: int
+    cat_vmax: int = 0
+    num_names: Tuple[str, ...] = ()
+    cat_names: Tuple[str, ...] = ()
+    measure_names: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.cat_vmax == 0 and self.cat_sizes:
+            object.__setattr__(self, "cat_vmax", int(max(self.cat_sizes)))
+
+    @property
+    def n_num(self) -> int:
+        return len(self.num_lo)
+
+    @property
+    def n_cat(self) -> int:
+        return len(self.cat_sizes)
+
+    def normalize(self, dim: int, value):
+        lo, hi = self.num_lo[dim], self.num_hi[dim]
+        return (value - lo) / max(hi - lo, 1e-300)
+
+    def denormalize(self, dim: int, value):
+        lo, hi = self.num_lo[dim], self.num_hi[dim]
+        return value * (hi - lo) + lo
+
+
+@pytree_dataclass
+class SnippetBatch:
+    """A batch of query snippets, vectorized (struct of arrays).
+
+    lo, hi    : (n, l) f64 — normalized numeric range constraints (defaults 0/1)
+    cat       : (n, c, V) bool — categorical membership masks (all-True = free)
+    agg       : (n,) i32 — AVG / FREQ
+    measure   : (n,) i32 — measure attribute index (0 for FREQ)
+    """
+
+    lo: jax.Array
+    hi: jax.Array
+    cat: jax.Array
+    agg: jax.Array
+    measure: jax.Array
+
+    @property
+    def n(self) -> int:
+        return self.lo.shape[0]
+
+    def __getitem__(self, idx) -> "SnippetBatch":
+        if isinstance(idx, int):
+            idx = slice(idx, idx + 1)
+        return SnippetBatch(
+            lo=self.lo[idx],
+            hi=self.hi[idx],
+            cat=self.cat[idx],
+            agg=self.agg[idx],
+            measure=self.measure[idx],
+        )
+
+    @staticmethod
+    def concat(batches) -> "SnippetBatch":
+        return SnippetBatch(
+            lo=jnp.concatenate([b.lo for b in batches]),
+            hi=jnp.concatenate([b.hi for b in batches]),
+            cat=jnp.concatenate([b.cat for b in batches]),
+            agg=jnp.concatenate([b.agg for b in batches]),
+            measure=jnp.concatenate([b.measure for b in batches]),
+        )
+
+    @staticmethod
+    def empty(schema: Schema) -> "SnippetBatch":
+        l, c, v = schema.n_num, schema.n_cat, schema.cat_vmax
+        return SnippetBatch(
+            lo=jnp.zeros((0, l)),
+            hi=jnp.ones((0, l)),
+            cat=jnp.ones((0, c, max(v, 1)), dtype=bool),
+            agg=jnp.zeros((0,), jnp.int32),
+            measure=jnp.zeros((0,), jnp.int32),
+        )
+
+
+def make_snippets(
+    schema: Schema,
+    *,
+    agg,
+    measure=None,
+    num_ranges=None,
+    cat_sets=None,
+) -> SnippetBatch:
+    """Build a SnippetBatch from python-level predicate descriptions.
+
+    num_ranges: list (len n) of dict {dim: (lo, hi)} in RAW attribute units.
+    cat_sets:   list (len n) of dict {dim: iterable of category ids}.
+    agg:        int or list of ints; measure likewise.
+    """
+    num_ranges = num_ranges or [{}]
+    n = len(num_ranges)
+    cat_sets = cat_sets or [{} for _ in range(n)]
+    if len(cat_sets) != n:
+        raise ValueError("num_ranges and cat_sets length mismatch")
+    l, c, v = schema.n_num, schema.n_cat, max(schema.cat_vmax, 1)
+    lo = np.zeros((n, l))
+    hi = np.ones((n, l))
+    cat = np.zeros((n, c, v), dtype=bool)
+    for k, size in enumerate(schema.cat_sizes):
+        cat[:, k, :size] = True
+    for i, ranges in enumerate(num_ranges):
+        for dim, (a, b) in ranges.items():
+            lo[i, dim] = schema.normalize(dim, a)
+            hi[i, dim] = schema.normalize(dim, b)
+    for i, sets in enumerate(cat_sets):
+        for dim, values in sets.items():
+            cat[i, dim, :] = False
+            for val in values:
+                cat[i, dim, int(val)] = True
+    agg_arr = np.full((n,), agg, np.int32) if np.isscalar(agg) else np.asarray(agg, np.int32)
+    if measure is None:
+        measure = 0
+    mea_arr = (
+        np.full((n,), measure, np.int32)
+        if np.isscalar(measure)
+        else np.asarray(measure, np.int32)
+    )
+    return SnippetBatch(
+        lo=jnp.asarray(lo),
+        hi=jnp.asarray(hi),
+        cat=jnp.asarray(cat),
+        agg=jnp.asarray(agg_arr),
+        measure=jnp.asarray(mea_arr),
+    )
+
+
+@pytree_dataclass
+class GPParams:
+    """Correlation parameters of one aggregate function g (paper §4.2, App. A/F.3).
+
+    log_ls     : (l,) log lengthscales (normalized units)
+    log_sigma2 : () log of sigma_g^2
+    mu         : () prior mean (AVG: answer units; FREQ: density units)
+    """
+
+    log_ls: jax.Array
+    log_sigma2: jax.Array
+    mu: jax.Array
+
+    @property
+    def ls(self):
+        return jnp.exp(self.log_ls)
+
+    @property
+    def sigma2(self):
+        return jnp.exp(self.log_sigma2)
+
+    @staticmethod
+    def init(schema: Schema, sigma2=1.0, mu=0.0) -> "GPParams":
+        # Paper App. A: starting lengthscale = attribute range (=1.0 normalized).
+        return GPParams(
+            log_ls=jnp.zeros((schema.n_num,)),
+            log_sigma2=jnp.log(jnp.asarray(float(sigma2))),
+            mu=jnp.asarray(float(mu)),
+        )
+
+
+@pytree_dataclass
+class RawAnswer:
+    """AQP engine output for a batch of snippets: theta_i and beta_i^2."""
+
+    theta: jax.Array  # (n,)
+    beta2: jax.Array  # (n,)
+
+
+@pytree_dataclass
+class ImprovedAnswer:
+    """Verdict output: improved answer/error plus bookkeeping.
+
+    accepted: bool per snippet — whether the model-based answer passed validation
+    (False ⇒ theta/beta2 are the raw values, paper §3.2 / Appendix B).
+    """
+
+    theta: jax.Array
+    beta2: jax.Array
+    raw_theta: jax.Array
+    raw_beta2: jax.Array
+    accepted: jax.Array
+
+    def error_bound(self, delta: float = 0.95):
+        from repro.utils.stats import confidence_multiplier
+
+        return confidence_multiplier(delta) * jnp.sqrt(self.beta2)

@@ -1,0 +1,32 @@
+"""Model validation (paper Appendix B).
+
+The model-based answer is accepted only if the AQP raw answer lands inside the
+"likely region" the model predicts for it; otherwise Verdict returns the raw
+answer unchanged (this is what makes Theorem 1 hold unconditionally).
+
+likely region: |theta_raw - theta_dd| < t with t = alpha_{delta_v} * beta_raw
+(the AQP answer is ~N(exact, beta^2) by the engine's own CLT bound; under the
+model's hypothesis exact = theta_dd).
+
+FREQ(*) additionally rejects negative model-based answers and clamps CI lower
+bounds at zero.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import FREQ
+from repro.utils.stats import confidence_multiplier
+
+
+@jax.jit
+def validate(agg, model_theta, model_beta2, raw_theta, raw_beta2, delta_v=0.99):
+    """Returns (theta_hat, beta2_hat, accepted) per snippet (batched)."""
+    t = confidence_multiplier(delta_v) * jnp.sqrt(jnp.maximum(raw_beta2, 0.0))
+    in_region = jnp.abs(raw_theta - model_theta) <= t
+    nonneg_ok = jnp.where(agg == FREQ, model_theta >= 0.0, True)
+    accepted = in_region & nonneg_ok
+    theta = jnp.where(accepted, model_theta, raw_theta)
+    beta2 = jnp.where(accepted, model_beta2, raw_beta2)
+    return theta, beta2, accepted

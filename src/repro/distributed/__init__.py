@@ -1,0 +1,7 @@
+from repro.distributed.sharding import (
+    DEFAULT_RULES,
+    batch_axes,
+    cache_shardings,
+    data_shards,
+    opt_state_shardings,
+)

@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis rules and sharding trees for steps and caches.
+
+Baseline layout (Megatron-style TP x DP, + pod axis for multi-pod DP):
+  batch        -> ('pod', 'data')
+  vocab/heads/ffn/experts -> 'model'
+  embed (d_model dims), head_dim, states -> replicated
+KV heads shard over 'model' only when divisible (else replicated — standard
+GQA practice); head counts are padded at spec-build time (ArchConfig).
+Alternative rule sets (fsdp / sequence-parallel) are hillclimb levers.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as Pspec
+
+DEFAULT_RULES = {
+    "vocab": "model",
+    "heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "embed": None,
+    "layers": None,
+}
+
+# ZeRO/FSDP-flavoured: additionally shard the d_model dimension of weights
+# over the data axis (parameter+optimizer state sharding; gathered per layer).
+FSDP_RULES = dict(DEFAULT_RULES, embed="data")
+
+# Pure ZeRO-3 data parallelism: the WHOLE 256-chip mesh is one data-parallel
+# domain (batch over ('data','model')); weights/optimizer state fully sharded
+# on their d_model dim; XLA inserts per-layer all-gather (params) and
+# reduce-scatter (grads) — wire cost ~3 x params/step instead of
+# O(tokens x layers) activation all-reduces. The winning layout for <=10B
+# dense models at pod scale (EXPERIMENTS.md §Perf, qwen train hillclimb).
+# Dense archs only (MoE expert-parallelism needs the model axis).
+PURE_DP_RULES = {
+    "vocab": None,
+    "heads": None,
+    "ffn": None,
+    "experts": None,
+    "embed": ("data", "model"),
+    "layers": None,
+    "_batch_axes": ("data", "model"),  # consumed by launch.cells
+}
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+def data_shards(mesh, multi_pod: bool) -> int:
+    n = mesh.shape["data"]
+    return n * (mesh.shape["pod"] if multi_pod else 1)
+
+
+def named(mesh, *spec):
+    return NamedSharding(mesh, Pspec(*spec))
+
+
+def batch_sharding(mesh, multi_pod: bool, ndim: int, batch_dim: int = 0):
+    spec = [None] * ndim
+    spec[batch_dim] = batch_axes(multi_pod)
+    return named(mesh, *spec)
+
+
+def opt_state_shardings(opt_name: str, param_shardings, abstract_state):
+    """Optimizer-state sharding mirroring parameter shardings.
+
+    adamw: m/v identical to params. adafactor: vr drops the last dim's spec,
+    vc drops the second-to-last.
+    """
+    mesh = jax.tree.leaves(param_shardings)[0].mesh
+
+    if opt_name == "adamw":
+        return {
+            "m": param_shardings,
+            "v": param_shardings,
+            "step": named(mesh),
+        }
+
+    # adafactor: walk the param sharding tree and emit {vr, vc} or {v}.
+    def state_for(shard, aparam):
+        ndim = len(aparam.shape)
+        spec = list(shard.spec)
+        spec = spec + [None] * (ndim - len(spec))
+        if ndim >= 2:
+            return {
+                "vr": named(mesh, *spec[:-1]),
+                "vc": named(mesh, *(spec[:-2] + spec[-1:])),
+            }
+        return {"v": named(mesh, *spec)}
+
+    return {
+        "v": jax.tree.map(state_for, param_shardings, abstract_state_params(abstract_state)),
+        "step": named(mesh),
+    }
+
+
+def abstract_state_params(abstract_state):
+    """adafactor state['v'] mirrors params structure with {vr,vc}|{v} leaves;
+    recover per-param shapes from vr/vc for spec derivation."""
+
+    def leaf(x):
+        if isinstance(x, dict) and ("vr" in x or "v" in x):
+            if "v" in x:
+                return jax.ShapeDtypeStruct(x["v"].shape, x["v"].dtype)
+            vr, vc = x["vr"], x["vc"]
+            return jax.ShapeDtypeStruct(vr.shape + vc.shape[-1:], vr.dtype)
+        return x
+
+    return jax.tree.map(
+        leaf, abstract_state["v"],
+        is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x),
+    )
+
+
+def cache_shardings(mesh, multi_pod: bool, abstract_caches, cfg, *,
+                    seq_axis=None, batch_sharded: bool = True):
+    """Sharding tree for decode caches.
+
+    Convention (see transformer.init_cache): leaves are either
+      attention k/v:  (R?, B, S, KV, hd)
+      slot_pos:       (R?, S)
+      cross xk/xv:    (R?, B, N, KV, hd)
+      rwkv state:     (R?, B, H, k, v) / x_prev (R?, B, d)
+      mamba conv/h:   (R?, B, K, di) / (R?, B, di, n)
+    Batch shards over the data axes; KV heads over 'model' when divisible;
+    mamba channel dims over 'model'. With ``shard_cache_seq`` (long-context,
+    batch=1) the KV sequence dim shards over 'data' instead of batch.
+    """
+    # long-context (batch=1) cells shard the KV sequence dim over 'data';
+    # the decode hillclimb shards it over 'model' (flash-decoding style,
+    # batch stays data-sharded) — see EXPERIMENTS.md §Perf.
+    b_ax = batch_axes(multi_pod) if batch_sharded else None
+    kv_ax = "model" if (cfg.kv_sharded and seq_axis != "model") else None
+
+    # Rank-based assignment: match by leaf name; any extra leading dims are
+    # the scan-stacking dims of repeated layer groups (replicated).
+    def spec_for(path, x):
+        keys = [str(getattr(p, "key", getattr(p, "name", ""))) for p in path]
+        name = keys[-1] if keys else ""
+        base = {
+            "k": (b_ax, seq_axis, kv_ax, None),
+            "v": (b_ax, seq_axis, kv_ax, None),
+            "xk": (b_ax, None, kv_ax, None),
+            "xv": (b_ax, None, kv_ax, None),
+            "slot_pos": (None,),
+            "x_prev": (b_ax, None),
+            "state": (b_ax, None, None, None),
+            "conv": (b_ax, None, "model"),
+            "h": (b_ax, "model", None),
+        }.get(name)
+        if base is None:
+            base = (b_ax,) + (None,) * (x.ndim - 1)
+        extra = x.ndim - len(base)
+        spec = (None,) * extra + tuple(base)  # leading scan dim(s) replicated
+        return named(mesh, *spec)
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_caches)

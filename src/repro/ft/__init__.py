@@ -1,0 +1,1 @@
+from repro.ft.checkpoint import CheckpointManager

@@ -1,0 +1,145 @@
+"""Sharded, atomic, async-capable checkpointing (no orbax offline).
+
+Layout:  <dir>/step_<n>/
+             manifest.json          tree structure, shapes, dtypes, step
+             shard_<p>.npz          arrays owned by process p (np.savez)
+             COMMITTED              empty marker written last (atomic rename)
+
+- Writes go to ``step_<n>.tmp`` then a single ``os.rename`` commits — a
+  killed writer never leaves a half-readable checkpoint.
+- ``save_async`` snapshots to host memory synchronously (jax.device_get) and
+  does the file I/O on a daemon thread, overlapping with the next step.
+- Restore validates the manifest against the target pytree structure and
+  ``device_put``s with the *target's* shardings, so restoring onto a
+  different mesh (elastic re-scale) is the same code path (see
+  repro.ft.elastic).
+- The Verdict query synopsis (a few MB, data-size-oblivious — paper §2) rides
+  along in every checkpoint under the 'synopsis' key when provided.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()  # serialize with any in-flight async save
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host_tree, extra or {}), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_tree, extra: dict):
+        flat, _ = _flatten(host_tree)
+        proc = jax.process_index()
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"shard_{proc}.npz"),
+                 **{k: v for k, v in flat.items()})
+        manifest = {
+            "step": step,
+            "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                     for k, v in flat.items()},
+            "extra": extra,
+            "n_processes": jax.process_count(),
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        open(os.path.join(tmp, "COMMITTED"), "w").close()
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)
+
+    # --------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in sorted(os.listdir(self.dir)):
+            full = os.path.join(self.dir, name)
+            if name.startswith("step_") and not name.endswith(".tmp") \
+                    and os.path.exists(os.path.join(full, "COMMITTED")):
+                out.append(int(name[5:]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``target``; returns (tree, extra).
+
+        ``shardings``: optional tree of NamedShardings (defaults to the
+        target leaves' shardings when they are jax Arrays) — re-sharding onto
+        a different mesh happens here via device_put.
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        manifest = json.load(open(os.path.join(path, "manifest.json")))
+        data = {}
+        for p in range(manifest["n_processes"]):
+            with np.load(os.path.join(path, f"shard_{p}.npz")) as z:
+                for k in z.files:
+                    data[k] = z[k]
+        flat_t, treedef = _flatten(target)
+        missing = set(flat_t) - set(data)
+        if missing:
+            raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+        if shardings is not None:
+            flat_s, _ = _flatten(shardings)
+        else:
+            flat_s = {k: getattr(v, "sharding", None) for k, v in flat_t.items()}
+        restored = {}
+        for k, leaf in flat_t.items():
+            arr = data[k]
+            want_dtype = getattr(leaf, "dtype", arr.dtype)
+            arr = arr.astype(want_dtype)
+            s = flat_s.get(k)
+            restored[k] = jax.device_put(arr, s) if s is not None else jax.numpy.asarray(arr)
+        leaves = [restored[k] for k, _ in _flatten(target)[0].items()]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        return tree, manifest["extra"]

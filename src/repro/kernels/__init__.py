@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for Verdict's compute hot spots.
+
+Each kernel package follows the kernel.py (pl.pallas_call + BlockSpec VMEM
+tiling) / ops.py (jit'd public wrapper with padding + epilogue) / ref.py
+(pure-jnp oracle) convention. On this CPU container kernels execute via
+``interpret=True``; on TPU the same BlockSpecs define the VMEM working set.
+
+Kernels:
+  se_covariance   -- blocked closed-form SE double-integral covariance build
+                     (offline learning hot loop: O(n^2 l) erf evaluations).
+  range_mask_agg  -- (tuples x snippets) predicate mask built in VMEM, then
+                     mask^T @ [measures, measures^2, 1] on the MXU (the AQP
+                     scan hot loop).
+  gp_batch_infer  -- gamma^2 = diag(K Sigma^-1 K^T) + prior blend, tiled on
+                     the MXU (the query-time inference hot loop, Eq. 11/12).
+"""
+
+INTERPRET = True  # CPU container: flip to False on real TPU.

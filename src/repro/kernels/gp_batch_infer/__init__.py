@@ -1,0 +1,1 @@
+from repro.kernels.gp_batch_infer.ops import gp_batch_infer

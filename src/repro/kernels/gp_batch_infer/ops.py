@@ -1,0 +1,43 @@
+"""Public jit'd wrapper for the fused improved-answer kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import INTERPRET
+from repro.kernels.gp_batch_infer.kernel import gp_batch_infer_pallas
+
+
+def _pad1(x, mult, fill=0.0):
+    pad = (-x.shape[0]) % mult
+    return x if pad == 0 else jnp.concatenate(
+        [x, jnp.full((pad,) + x.shape[1:], fill, x.dtype)])
+
+
+@partial(jax.jit, static_argnames=("tile_q", "tile_c", "interpret"))
+def gp_batch_infer(k_mat, sigma_inv, alpha, kappa2, mu_new, raw_theta, raw_beta2,
+                   *, tile_q: int = 128, tile_c: int = 128,
+                   interpret: bool = INTERPRET):
+    """(theta_dd, beta2_dd, gamma2) for Q new snippets; f32 on the MXU.
+
+    Zero-padding C is exact (zero K columns/Sinv blocks contribute nothing);
+    padded Q rows are sliced away.
+    """
+    q_n, c_n = k_mat.shape
+    dt = jnp.float32
+    k_p = _pad1(k_mat.astype(dt), tile_q)
+    k_p = jnp.pad(k_p, ((0, 0), (0, (-c_n) % tile_c)))
+    s_p = jnp.pad(sigma_inv.astype(dt),
+                  ((0, (-c_n) % tile_c), (0, (-c_n) % tile_c)))
+    a_p = _pad1(alpha.astype(dt), tile_c)
+    kap = _pad1(kappa2.astype(dt), tile_q, fill=1.0)
+    mu = _pad1(mu_new.astype(dt), tile_q)
+    rt = _pad1(raw_theta.astype(dt), tile_q)
+    rb = _pad1(raw_beta2.astype(dt), tile_q, fill=1.0)
+    theta, beta2, gamma2 = gp_batch_infer_pallas(
+        k_p, s_p, a_p, kap, mu, rt, rb,
+        tile_q=tile_q, tile_c=tile_c, interpret=interpret,
+    )
+    return theta[:q_n], beta2[:q_n], gamma2[:q_n]

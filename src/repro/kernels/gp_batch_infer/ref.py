@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused improved-answer kernel (Eq. 11/12)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+GAMMA_FLOOR = 1e-30
+
+
+def gp_batch_infer_ref(k_mat, sigma_inv, alpha, kappa2, mu_new, raw_theta, raw_beta2):
+    t = k_mat @ sigma_inv
+    gamma2 = jnp.maximum(kappa2 - jnp.sum(t * k_mat, axis=-1), GAMMA_FLOOR)
+    prior = mu_new + k_mat @ alpha
+    denom = raw_beta2 + gamma2
+    theta = (raw_beta2 * prior + gamma2 * raw_theta) / denom
+    beta2 = raw_beta2 * gamma2 / denom
+    exact = raw_beta2 <= 0.0
+    theta = jnp.where(exact, raw_theta, theta)
+    beta2 = jnp.where(exact, 0.0, beta2)
+    return theta, beta2, gamma2

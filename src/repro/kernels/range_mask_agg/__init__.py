@@ -1,0 +1,1 @@
+from repro.kernels.range_mask_agg.ops import eval_partials_kernel, range_mask_agg

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the range-mask aggregation kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def range_mask_agg_ref(x, payload, lo, hi, extra_mask):
+    """x: (T,L); payload: (T,P); lo/hi: (Q,L); extra_mask: (T,Q) -> (Q,P).
+
+    out[q, p] = sum_t [all_k lo[q,k] <= x[t,k] <= hi[q,k]] * extra[t,q] * payload[t,p]
+    """
+    m = jnp.all(
+        (x[:, None, :] >= lo[None, :, :] - 1e-7)
+        & (x[:, None, :] <= hi[None, :, :] + 1e-7),
+        axis=-1,
+    ).astype(payload.dtype)
+    m = m * extra_mask.astype(payload.dtype)
+    return m.T @ payload

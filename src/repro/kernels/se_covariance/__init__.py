@@ -1,0 +1,1 @@
+from repro.kernels.se_covariance.ops import se_cov_matrix

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the blocked SE-covariance kernel.
+
+The numeric factor of cov(theta_i, theta_j) (paper Eq. 10): product over
+numeric dims of the closed-form double integral, scaled by
+sigma2 / (norm_i * norm_j).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.covariance import se_double_integral
+
+
+def se_cov_matrix_ref(lo_i, hi_i, lo_j, hi_j, ls, sigma2, norm_i, norm_j):
+    """lo/hi: (n, l) pre-widened ranges; ls: (l,); norm: (n,). -> (n_i, n_j)."""
+    g = se_double_integral(
+        lo_i[:, None, :], hi_i[:, None, :], lo_j[None, :, :], hi_j[None, :, :], ls
+    )
+    g = jnp.maximum(g, 0.0)
+    prod = jnp.prod(g, axis=-1)
+    return sigma2 * prod / (norm_i[:, None] * norm_j[None, :])

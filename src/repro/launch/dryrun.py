@@ -1,0 +1,155 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on init.
+
+"""Multi-pod dry-run: AOT lower+compile every (arch x shape x mesh) cell.
+
+Per cell:
+  1. compile the full (scanned) step -> memory_analysis (fit proof),
+     cost_analysis (per-device base cost), HLO text (collective schedule);
+  2. compile the cell's probes (one layer group / SSM chunk body at full
+     shapes+shardings) -> exact per-layer FLOPs/bytes; combine with known
+     trip counts (launch.roofline);
+  3. parse collective wire bytes from the HLO (loop-trip multiplied);
+  4. emit one JSON record (appended to the output JSONL immediately).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --cells all --meshes both \
+      --out experiments/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --cells qwen2.5-3b:train_4k
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch import cells as C  # noqa: E402
+from repro.launch import hlo_analysis as H  # noqa: E402
+from repro.launch import roofline as R  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, rules=None,
+             label: str = "baseline", skip_probes: bool = False,
+             accum=None, cache_seq_axis=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = C.build_cell(arch, shape, mesh, multi_pod, rules=rules,
+                        accum=accum, cache_seq_axis=cache_seq_axis)
+    rec = {"arch": arch, "shape": shape, "kind": cell.kind, "label": label,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": 512 if multi_pod else 256, **cell.meta}
+    with mesh:
+        jitted = jax.jit(cell.step, donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args, **cell.kwargs)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 1)
+
+        ma = compiled.memory_analysis()
+        print(ma)
+        rec["memory"] = {
+            "argument_gb": ma.argument_size_in_bytes / 1e9,
+            "output_gb": ma.output_size_in_bytes / 1e9,
+            "alias_gb": ma.alias_size_in_bytes / 1e9,
+            "temp_gb": ma.temp_size_in_bytes / 1e9,
+        }
+        ca = compiled.cost_analysis()
+        print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+        step_cost = {"flops": float(ca.get("flops", 0.0)),
+                     "bytes accessed": float(ca.get("bytes accessed", 0.0))}
+
+        hlo = compiled.as_text()
+        rec["collectives"] = H.collective_bytes(hlo)
+
+        probe_costs = []
+        rec["probes"] = {}
+        if not skip_probes:
+            for lbl, mult, fn, pargs in cell.probes:
+                pl = jax.jit(fn).lower(*pargs)
+                pc = pl.compile().cost_analysis()
+                cost = {"flops": float(pc.get("flops", 0.0)),
+                        "bytes accessed": float(pc.get("bytes accessed", 0.0))}
+                probe_costs.append((mult, cost))
+                rec["probes"][lbl] = {"multiplier": mult, **cost}
+
+        totals = R.combine_costs(step_cost, probe_costs)
+        rec.update(totals)
+        wire = rec["collectives"]["wire_bytes_total"]
+        rec["roofline"] = R.roofline(totals["flops_per_device"],
+                                     totals["bytes_per_device"], wire)
+        mf = R.model_flops(cell.cfg, cell.kind, cell.meta["seq"],
+                           cell.meta["batch"])
+        rec["model_flops_total"] = mf
+        per_dev = totals["flops_per_device"]
+        rec["model_flops_per_device"] = mf / rec["chips"]
+        rec["useful_flops_ratio"] = (mf / rec["chips"]) / per_dev if per_dev else 0.0
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cells", default="all",
+                    help="'all' or comma list of arch:shape")
+    ap.add_argument("--meshes", default="both", choices=["both", "single", "multi"])
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--rules", default="default",
+                    choices=["default", "fsdp", "pure_dp"])
+    ap.add_argument("--label", default="baseline")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--cache-seq-axis", default=None,
+                    choices=[None, "data", "model"])
+    ap.add_argument("--skip-probes", action="store_true")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip cells already present in --out")
+    args = ap.parse_args()
+
+    if args.cells == "all":
+        todo = C.cell_list()
+    else:
+        todo = [tuple(c.split(":")) for c in args.cells.split(",")]
+    meshes = {"both": [False, True], "single": [False], "multi": [True]}[args.meshes]
+
+    from repro.distributed.sharding import (DEFAULT_RULES, FSDP_RULES,
+                                            PURE_DP_RULES)
+    rules = {"default": DEFAULT_RULES, "fsdp": FSDP_RULES,
+             "pure_dp": PURE_DP_RULES}[args.rules]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                if r.get("ok"):
+                    done.add((r["arch"], r["shape"], r["mesh"], r["label"]))
+            except json.JSONDecodeError:
+                pass
+
+    n_fail = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            if (arch, shape, mesh_name, args.label) in done:
+                continue
+            print(f"=== {arch} x {shape} x {mesh_name} [{args.label}]", flush=True)
+            try:
+                rec = run_cell(arch, shape, mp, rules=rules, label=args.label,
+                               skip_probes=args.skip_probes, accum=args.accum,
+                               cache_seq_axis=args.cache_seq_axis)
+                rec["ok"] = True
+            except Exception as e:  # record and continue — failures are bugs
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "label": args.label, "ok": False, "error": repr(e)}
+                n_fail += 1
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            print(f"    -> ok={rec['ok']}", flush=True)
+    print(f"done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Post-SPMD HLO analysis: collective-byte accounting with loop attribution.
+
+``compiled.as_text()`` (per-device, post-partitioning) is parsed into
+computations; collective ops (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute) are attributed to their enclosing
+computation; while-loop bodies multiply by their trip count (recovered from
+the loop condition's comparison constant); nesting multiplies. Wire-cost
+factors: all-reduce 2x (RS+AG), others 1x (ring (n-1)/n ~ 1).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+WIRE_FACTOR = {"all-reduce": 2.0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> float:
+    """Sum bytes over every tensor literal in a result-shape string."""
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo: str) -> Dict[str, str]:
+    """computation name -> body text.
+
+    Computation headers look like ``%name (args...) -> type {`` with possibly
+    nested parentheses in tuple types, so we key on the trailing '{' plus a
+    '->' and take the leading token as the name.
+    """
+    comps = {}
+    cur = None
+    buf = []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        is_header = (
+            stripped.endswith("{") and "->" in stripped
+            and not stripped.startswith("ROOT")
+            and re.match(r"^(ENTRY\s+)?%?[\w\.\-]+\s*\(", stripped)
+        )
+        if is_header and cur is None:
+            name = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)", stripped).group(1)
+            cur = name
+            buf = []
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                comps[cur] = "\n".join(buf)
+                cur = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _loop_info(comps):
+    """(parent, cond_comp, body_comp) for every while op."""
+    loops = []
+    for parent, body_txt in comps.items():
+        for line in body_txt.splitlines():
+            if " while(" not in line:
+                continue
+            mb = re.search(r"body=%?([\w\.\-]+)", line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", line)
+            if mb and mc:
+                loops.append((parent, mc.group(1), mb.group(1)))
+    return loops
+
+
+def _trip_count(cond_txt: str) -> int:
+    """Largest s32 constant compared in the loop condition ~ trip count."""
+    consts = [int(c) for c in re.findall(r"constant\((\d+)\)", cond_txt)]
+    return max(consts) if consts else 1
+
+
+def _call_edges(comps):
+    """parent -> [(child, multiplier)] via while bodies and calls/fusions."""
+    edges = defaultdict(list)
+    loops = _loop_info(comps)
+    loop_bodies = set()
+    for parent, cond, body in loops:
+        trips = _trip_count(comps.get(cond, ""))
+        edges[parent].append((body, trips))
+        loop_bodies.add(body)
+    for parent, txt in comps.items():
+        for m in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", txt):
+            child = m.group(1)
+            if child not in loop_bodies and child in comps:
+                edges[parent].append((child, 1))
+    return edges
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Per-collective-kind wire bytes (per device), loop-trip multiplied."""
+    comps = parse_computations(hlo)
+    edges = _call_edges(comps)
+    # effective multiplier per computation (DFS from entry computations —
+    # those never referenced as children)
+    referenced = {c for kids in edges.values() for c, _ in kids}
+    mult = defaultdict(float)
+    roots = [c for c in comps if c not in referenced]
+
+    def visit(comp, m):
+        mult[comp] += m
+        for child, k in edges.get(comp, []):
+            visit(child, m * k)
+
+    for r in roots:
+        visit(r, 1.0)
+
+    out = defaultdict(float)
+    op_counts = defaultdict(int)
+    for comp, txt in comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0:
+            continue
+        for line in txt.splitlines():
+            if " = " not in line:
+                continue
+            rhs = line.split(" = ", 1)[1]
+            for kind in COLLECTIVES:
+                # result shape precedes the op name: "bf16[...] all-reduce(".
+                idx = rhs.find(f" {kind}(")
+                if idx < 0:
+                    idx = rhs.find(f" {kind}-start(")
+                if idx >= 0:
+                    nbytes = _shape_bytes(rhs[:idx])
+                    out[kind] += nbytes * m
+                    op_counts[kind] += int(m)
+                    break
+    out_wire = {k: v * WIRE_FACTOR.get(k, 1.0) for k, v in out.items()}
+    return {
+        "bytes_by_kind": dict(out),
+        "wire_bytes_by_kind": out_wire,
+        "wire_bytes_total": float(sum(out_wire.values())),
+        "op_counts": dict(op_counts),
+    }

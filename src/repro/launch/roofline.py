@@ -1,0 +1,59 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e-class targets).
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s)
+    collective term = wire_bytes / (chips x 50 GB/s/link)
+
+cost_analysis() is per-device and counts scan bodies once (measured fact,
+DESIGN.md §5), so per-cell totals are assembled as
+
+    total = step_cost + sum_probes multiplier x probe_cost
+
+where probes re-compile one scanned layer group (and, for SSM archs, one
+chunk-scan body) at full shapes/shardings. Collective bytes come from the HLO
+parser, which multiplies loop bodies by their trip counts directly.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+
+def combine_costs(step_cost: Dict, probe_costs) -> Dict[str, float]:
+    flops = step_cost.get("flops", 0.0)
+    byts = step_cost.get("bytes accessed", 0.0)
+    for mult, cost in probe_costs:
+        flops += mult * cost.get("flops", 0.0)
+        byts += mult * cost.get("bytes accessed", 0.0)
+    return {"flops_per_device": float(flops), "bytes_per_device": float(byts)}
+
+
+def roofline(flops_per_device: float, bytes_per_device: float,
+             wire_bytes_per_device: float) -> Dict[str, float]:
+    compute_s = flops_per_device / PEAK_FLOPS
+    memory_s = bytes_per_device / HBM_BW
+    collective_s = wire_bytes_per_device / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    terms.update({
+        "dominant": dom,
+        "step_time_lower_bound_s": bound,
+        # fraction of the bound the compute term occupies = roofline fraction
+        "roofline_fraction": compute_s / bound if bound > 0 else 0.0,
+    })
+    return terms
+
+
+def model_flops(cfg, kind: str, seq: int, batch: int) -> float:
+    """MODEL_FLOPS (all devices): 6·N_active·D train; 2·N_active·tokens decode."""
+    n_act = cfg.n_active_params
+    if kind == "train":
+        return 6.0 * n_act * seq * batch
+    if kind == "prefill":
+        return 2.0 * n_act * seq * batch
+    return 2.0 * n_act * batch  # decode: one token per sequence

@@ -1,0 +1,98 @@
+"""End-to-end training driver with checkpoint/restart and failure simulation.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+        --steps 50 --ckpt-every 10 --ckpt-dir /tmp/run1
+    # kill it any time; rerunning the same command resumes from the last
+    # committed checkpoint (including data-pipeline position and the Verdict
+    # synopsis if attached).  --simulate-failure N aborts at step N to
+    # exercise the restart path deterministically.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.pipeline import TokenPipeline
+from repro.ft.checkpoint import CheckpointManager
+from repro.models import params as PM
+from repro.models.common import ShardCtx
+from repro.training.optimizer import adamw, adafactor, cosine_schedule
+from repro.training.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adafactor"])
+    ap.add_argument("--simulate-failure", type=int, default=-1)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    opt = adamw() if args.optimizer == "adamw" else adafactor()
+    sched = cosine_schedule(args.lr, warmup=max(args.steps // 10, 1),
+                            total=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, opt, ShardCtx(), accum=args.accum))
+
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq,
+                         global_batch=args.batch * args.accum, seed=0,
+                         over_factor=1)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    params = PM.init_params(cfg, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    start = 0
+    if mgr.latest_step() is not None:
+        (params, opt_state), extra = mgr.restore((params, opt_state))
+        start = extra["step"] + 1
+        pipe.load_state_dict(extra["pipe"])
+        print(f"[restore] resumed from step {extra['step']}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        toks, labels = pipe.next_batch()
+        batch = {
+            "tokens": jnp.asarray(toks.reshape(args.accum, args.batch, args.seq)),
+            "labels": jnp.asarray(labels.reshape(args.accum, args.batch, args.seq)),
+        }
+        if cfg.cross_attn:
+            batch["ctx"] = jnp.zeros(
+                (args.accum, args.batch, cfg.cross_attn.n_ctx, cfg.d_model),
+                jnp.dtype(cfg.compute_dtype))
+        if cfg.enc_dec:
+            batch["enc"] = jnp.zeros((args.accum, args.batch, args.seq, cfg.d_model),
+                                     jnp.dtype(cfg.compute_dtype))
+        params, opt_state, metrics = step_fn(params, opt_state, batch,
+                                             sched(step))
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0):.1f}s)", flush=True)
+        if step == args.simulate_failure:
+            print(f"[failure] simulated crash at step {step}")
+            raise SystemExit(42)
+        if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+            mgr.save_async(step, (params, opt_state),
+                           {"step": step, "pipe": pipe.state_dict()})
+    mgr.wait()
+    mgr.save(args.steps - 1, (params, opt_state),
+             {"step": args.steps - 1, "pipe": pipe.state_dict()})
+    print("done")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""GQA attention with RoPE, logit softcap, sliding windows, cross-attention,
+and a ring-buffered KV cache for decode.
+
+Head layout: projections carry (heads, head_dim) explicitly so tensor-parallel
+sharding acts on the heads axis; configs whose head counts don't divide the TP
+degree are padded at spec-build time (see ArchConfig.heads_padded) — padding
+heads produce garbage that wo simply projects with zero-initialized rows, and
+their FLOPs are charged to the MODEL/HLO ratio in the roofline table.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import rope, softcap
+
+NEG = -2.0e38
+
+
+def _project_qkv(cfg, p, x, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scores_to_out(cfg, q, k, v, mask):
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd); mask: (B,1,1,S,T) or broadcastable."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    logits = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    logits = logits / (hd**0.5)
+    logits = softcap(logits, cfg.attn_softcap)
+    logits = jnp.where(mask, logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(b, s, h, hd)
+
+
+def self_attention(cfg, p, x, positions, *, causal=True, window=0):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    s = x.shape[1]
+    qp = positions[:, :, None]  # (B,S,1)
+    kp = positions[:, None, :]  # (B,1,T)
+    mask = jnp.ones((1, s, s), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window:
+        mask = mask & (qp - kp < window)
+    mask = mask[:, None, None]  # (B,1,1,S,T)
+    out = _scores_to_out(cfg, q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+def cross_attention(cfg, p, x, ctx_kv, *, gated=True):
+    """x: (B,S,d); ctx_kv: precomputed (k, v) of ctx tokens (B,N,KV,hd)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # no RoPE on cross-attn
+    k, v = ctx_kv
+    mask = jnp.ones((1, 1, 1, 1, 1), bool)
+    out = _scores_to_out(cfg, q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if gated and "gate" in p:
+        out = jnp.tanh(p["gate"]).astype(out.dtype) * out
+    return out
+
+
+def ctx_kv(cfg, p, ctx):
+    """Project context tokens to (k, v) once (prefill-time)."""
+    k = jnp.einsum("bnd,dhk->bnhk", ctx, p["wk"])
+    v = jnp.einsum("bnd,dhk->bnhk", ctx, p["wv"])
+    return k, v
+
+
+def init_attn_cache(cfg, batch: int, max_len: int, window: int = 0, dtype=None):
+    """Ring KV cache; local layers bound the ring at ``window`` slots."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    slots = min(window, max_len) if window else max_len
+    kv = cfg.kv_padded
+    return {
+        "k": jnp.zeros((batch, slots, kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, slots, kv, cfg.head_dim), dtype),
+        "slot_pos": jnp.full((slots,), -1, jnp.int32),
+    }
+
+
+def prefill_attn_cache(cache, k, v, positions):
+    """Write a full prefix into the cache (assumes prefix <= slots)."""
+    slots = cache["k"].shape[1]
+    s = k.shape[1]
+    start = jnp.maximum(s - slots, 0)
+    take = min(slots, s)
+    kk = jax.lax.dynamic_slice_in_dim(k, start, take, axis=1)
+    vv = jax.lax.dynamic_slice_in_dim(v, start, take, axis=1)
+    pp = jax.lax.dynamic_slice_in_dim(positions[0], start, take, axis=0)
+    idx = pp % slots  # ring placement consistent with decode
+    ck = cache["k"].at[:, idx].set(kk)
+    cv = cache["v"].at[:, idx].set(vv)
+    sp = cache["slot_pos"].at[idx].set(pp.astype(jnp.int32))
+    return {"k": ck, "v": cv, "slot_pos": sp}
+
+
+def decode_attention(cfg, p, x, cache, pos, *, window=0):
+    """One-token decode: x (B,1,d), pos () int32. Returns (out, new_cache)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    slots = cache["k"].shape[1]
+    slot = (pos % slots).astype(jnp.int32)
+    zero = jnp.int32(0)  # match slot dtype regardless of the x64 flag
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (zero, slot, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (zero, slot, zero, zero))
+    sp = jax.lax.dynamic_update_slice(cache["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+    valid = (sp >= 0) & (sp <= pos)
+    if window:
+        valid = valid & (pos - sp < window)
+    mask = valid[None, None, None, None, :]  # (1,1,1,1,T)
+    out = _scores_to_out(cfg, q, ck, cv, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": ck, "v": cv, "slot_pos": sp}

@@ -1,0 +1,129 @@
+"""Dense FFN and expert-parallel MoE.
+
+MoE dispatch (TPU/GSPMD adaptation, see DESIGN.md): activations entering the
+FFN block are replicated across the ``model`` mesh axis (standard Megatron TP
+layout), so expert parallelism needs **no token all-to-all**: a shard_map over
+``model`` gives each device its E/tp local experts; tokens route locally into
+an (E_local, capacity, d) buffer via scatter-add (O(N·d) data movement — not
+the O(N·E·C·d) one-hot einsum of GShard, which would dwarf the expert matmuls
+at E=128), batched expert matmuls run on the MXU, and a single psum over
+``model`` combines expert outputs — the same collective a dense TP FFN needs.
+
+Capacity: ceil(top_k·N/E · capacity_factor); overflow tokens are dropped
+(standard GShard/Switch semantics), underflow slots are zero.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activate
+
+
+def dense_ffn(cfg, p, x):
+    if "wg" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+        u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+        h = activate(cfg.act, g, u)
+    else:
+        h = activate("gelu_mlp", jnp.einsum("bsd,df->bsf", x, p["wi"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+
+
+def _route(cfg, router_logits):
+    """Top-k routing with renormalized softmax gates."""
+    k = cfg.moe.top_k
+    gates, idx = jax.lax.top_k(router_logits, k)  # (N, k)
+    gates = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
+    return gates, idx
+
+
+def _moe_experts(cfg, p, x_flat, e_lo, e_local, capacity):
+    """Scatter-dispatch -> batched expert matmuls -> gather-combine.
+
+    ``p`` holds the *local* expert weight slices (E_local, ...); the (full,
+    replicated) router produces global expert ids and tokens routed to
+    [e_lo, e_lo + e_local) are processed here. Returns this shard's partial
+    output (N, d) — psum over the model axis completes the MoE.
+    """
+    gates, idx = _route(cfg, jnp.einsum("nd,de->ne", x_flat, p["router"]))
+    n, d = x_flat.shape
+    k = cfg.moe.top_k
+
+    flat_idx = idx.reshape(-1)  # (N*k,) global expert ids
+    flat_gate = gates.reshape(-1)
+    local = (flat_idx >= e_lo) & (flat_idx < e_lo + e_local)
+    local_e = jnp.where(local, flat_idx - e_lo, e_local)  # sentinel e_local
+    # Rank of each (token, choice) within its expert queue (1-based cumsum).
+    onehot = jax.nn.one_hot(local_e, e_local + 1, dtype=jnp.int32)
+    slot = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    keep = local & (slot < capacity)
+    slot = jnp.where(keep, slot, capacity)  # overflow -> spill slot
+
+    tok = jnp.repeat(jnp.arange(n), k)
+    buf = jnp.zeros((e_local, capacity + 1, d), x_flat.dtype)
+    buf = buf.at[local_e, slot].add(
+        jnp.where(keep[:, None], x_flat[tok], 0.0), mode="drop"
+    )[:, :capacity]  # (E_local, C, d)
+
+    g = jnp.einsum("ecd,edf->ecf", buf, p["we_g"])
+    u = jnp.einsum("ecd,edf->ecf", buf, p["we_u"])
+    h = activate(cfg.act, g, u)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["we_d"])  # (E_local, C, d)
+
+    gathered = out_buf[local_e.clip(0, e_local - 1), slot.clip(0, capacity - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    contrib = gathered * flat_gate[:, None].astype(gathered.dtype)
+    return jnp.zeros_like(x_flat).at[tok].add(contrib)
+
+
+def moe_ffn(cfg, p, x, sctx):
+    """x: (B,S,d) -> (B,S,d). Expert-parallel over sctx.model_axis."""
+    b, s, d = x.shape
+    m = cfg.moe
+    x_flat = x.reshape(b * s, d)
+    n = b * s
+
+    if sctx.enabled:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as Pspec
+
+        tp = sctx.mesh.shape[sctx.model_axis]
+        e_per = m.n_experts // tp
+
+        def local_fn(xf, router, we_g, we_u, we_d):
+            # Capacity sized from the *local* token count (xf is the
+            # per-device shard): sizing from global N would give every
+            # device data_shards-times-oversized expert buffers — a 16x
+            # MoE overcompute found via the roofline useful-FLOPs ratio
+            # (EXPERIMENTS.md §Perf, arctic iteration 1).
+            cap = max(int(xf.shape[0] * m.top_k / m.n_experts
+                          * m.capacity_factor), 4)
+            e_lo = jax.lax.axis_index(sctx.model_axis) * e_per
+            pp = {"router": router, "we_g": we_g, "we_u": we_u, "we_d": we_d}
+            out = _moe_experts(cfg, pp, xf, e_lo, e_per, cap)
+            return jax.lax.psum(out, sctx.model_axis)
+
+        out_flat = shard_map(
+            local_fn,
+            mesh=sctx.mesh,
+            in_specs=(
+                Pspec(sctx.batch_axes, None),
+                Pspec(None, None),
+                Pspec(sctx.model_axis, None, None),
+                Pspec(sctx.model_axis, None, None),
+                Pspec(sctx.model_axis, None, None),
+            ),
+            out_specs=Pspec(sctx.batch_axes, None),
+            check_rep=False,
+        )(x_flat, p["router"], p["we_g"], p["we_u"], p["we_d"])
+    else:
+        capacity = max(int(n * m.top_k / m.n_experts * m.capacity_factor), 4)
+        out_flat = _moe_experts(cfg, p, x_flat, 0, m.n_experts, capacity)
+
+    out = out_flat.reshape(b, s, d)
+    if m.shared_expert:
+        out = out + dense_ffn(cfg, p["shared"], x)
+    if m.dense_residual:
+        out = out + dense_ffn(cfg, p["dense"], x)
+    return out

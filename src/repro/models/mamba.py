@@ -1,0 +1,121 @@
+"""Selective SSM (Mamba-2/SSD-style scalar-decay-per-channel) for Hymba.
+
+State: h (B, D_inner, N_state); per step
+    h_t = exp(dt_t * A)[d] * h_{t-1} + dt_t * x_t ⊗ B_t,   y_t = h_t · C_t
+Chunked like rwkv.py: log-decays accumulated from the chunk start so all
+pairwise ratios are <= 1; the intra-chunk term is a (C, C) matmul over the
+state dim plus a per-channel decay-ratio weighting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 16
+LW_MIN = -8.0
+
+
+def _proj(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    xi = jnp.einsum("bsd,de->bse", xf, p["w_in"].astype(jnp.float32))
+    z = jnp.einsum("bsd,de->bse", xf, p["w_z"].astype(jnp.float32))
+    bmat = jnp.einsum("bsd,dn->bsn", xf, p["w_b"].astype(jnp.float32))
+    cmat = jnp.einsum("bsd,dn->bsn", xf, p["w_c"].astype(jnp.float32))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,de->bse", xf, p["w_dt"].astype(jnp.float32))
+        + p["dt_bias"].astype(jnp.float32)
+    )
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (D,) scalar decay per channel
+    lw = jnp.clip(dt * a, LW_MIN, -1e-6)  # (B,S,D)
+    return xi, z, bmat, cmat, dt, lw
+
+
+def _chunk_step(h, inp):
+    """One chunk of the SSD-style scan. h: (B,D,N); inp: (uu,bb,cc,ll)."""
+    uu, bb, cc, ll = inp  # (B,C,D), (B,C,N), (B,C,N), (B,C,D)
+    cum = jnp.cumsum(ll, axis=1)  # (B,C,D)
+    # inter-chunk: y_t = C_t · (exp(cum_t) ⊙_D h)
+    y_inter = jnp.einsum("bcn,bcd,bdn->bcd", cc, jnp.exp(cum), h)
+    # intra-chunk: y[t,d] = sum_{tau<=t} (C_t·B_tau) exp(cum_t-cum_tau)[d] u[tau,d]
+    cb = jnp.einsum("bcn,btn->bct", cc, bb)  # (B,C,C)
+    c_len = uu.shape[1]
+    tri = jnp.tril(jnp.ones((c_len, c_len), bool))
+    cb = jnp.where(tri[None], cb, 0.0)
+    ratio = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,C,C,D) <=1
+    ratio = jnp.where(tri[None, :, :, None], ratio, 0.0)
+    y_intra = jnp.einsum("bct,bctd,btd->bcd", cb, ratio, uu)
+    # state update
+    decay_end = jnp.exp(cum[:, -1])  # (B,D)
+    tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,C,D)
+    h = decay_end[..., None] * h + jnp.einsum("bcd,bcn->bdn", uu * tail, bb)
+    return h, y_inter + y_intra
+
+
+def _conv_mix(p, xi, conv_state=None):
+    """Depthwise causal conv over time. xi: (B,S,D). Returns (out, new_state)."""
+    w = p["conv"].astype(jnp.float32)  # (K, D)
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((xi.shape[0], k - 1, xi.shape[2]), jnp.float32)
+    ext = jnp.concatenate([conv_state, xi], axis=1)
+    out = sum(ext[:, i : i + xi.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out), ext[:, -(k - 1) :, :]
+
+
+def mamba_mix(cfg, p, x, conv_state=None, h=None):
+    """Full-sequence selective SSM. x: (B,S,d). Returns (out, (conv_state, h))."""
+    b, s, d = x.shape
+    di = cfg.ssm.d_inner or d
+    n = cfg.ssm.state
+    xi, z, bmat, cmat, dt, lw = _proj(cfg, p, x)
+    xi, conv_state = _conv_mix(p, xi, conv_state)
+    if h is None:
+        h = jnp.zeros((b, di, n), jnp.float32)
+
+    pad = (-s) % CHUNK
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+    u = pad_t(xi * dt)  # (B,S',D) input scaled by dt
+    bm, cm, lwp = pad_t(bmat), pad_t(cmat), pad_t(lw)
+    nc = (s + pad) // CHUNK
+    u = u.reshape(b, nc, CHUNK, di)
+    bm = bm.reshape(b, nc, CHUNK, n)
+    cm = cm.reshape(b, nc, CHUNK, n)
+    lwp = lwp.reshape(b, nc, CHUNK, di)
+
+    h, ys = jax.lax.scan(
+        _chunk_step, h,
+        (jnp.moveaxis(u, 1, 0), jnp.moveaxis(bm, 1, 0),
+         jnp.moveaxis(cm, 1, 0), jnp.moveaxis(lwp, 1, 0)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, -1, di)[:, :s]
+    y = y * jax.nn.silu(z)
+    y = y * p["norm_b"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(jnp.float32))
+    return out.astype(x.dtype), (conv_state, h)
+
+
+def mamba_decode(cfg, p, x, conv_state, h):
+    """One-token recurrence. x: (B,1,d)."""
+    b, _, d = x.shape
+    xi, z, bmat, cmat, dt, lw = _proj(cfg, p, x)
+    xi, conv_state = _conv_mix(p, xi, conv_state)
+    u1 = (xi * dt)[:, 0]  # (B,D)
+    h = jnp.exp(lw[:, 0])[..., None] * h + jnp.einsum("bd,bn->bdn", u1, bmat[:, 0])
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0])[:, None]
+    y = y * jax.nn.silu(z) * p["norm_b"].astype(jnp.float32)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(jnp.float32))
+    return out.astype(x.dtype), (conv_state, h)
+
+
+def mamba_mix_ref(cfg, p, x):
+    """Sequential oracle for tests."""
+    b, s, d = x.shape
+    di = cfg.ssm.d_inner or d
+    conv_state = jnp.zeros((b, cfg.ssm.conv - 1, di), jnp.float32)
+    h = jnp.zeros((b, di, cfg.ssm.state), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, (conv_state, h) = mamba_decode(cfg, p, x[:, t : t + 1], conv_state, h)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,247 @@
+"""Parameter-spec system: one source of truth for shapes, logical axes, init.
+
+``param_specs(cfg)`` returns a pytree of ``P`` leaves (shape + logical axis
+names + init scale). The same tree materializes three ways:
+  - ``init_params``      -> real arrays (smoke tests, examples)
+  - ``abstract_params``  -> ShapeDtypeStruct with NamedSharding (dry-run)
+  - ``shardings``        -> NamedSharding tree (pjit in/out_shardings)
+
+Logical axes are resolved to mesh axes by a rules dict (see
+repro.distributed.sharding). Scanned layer groups get a leading 'layers' axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig, LayerSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter leaf spec."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones | decay
+    scale: float = 1.0
+
+    def stacked(self, n: int) -> "P":
+        return P((n,) + self.shape, ("layers",) + self.axes, self.init, self.scale)
+
+
+def _attn_specs(cfg: ArchConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.heads_padded, cfg.kv_padded
+    kv_ax = "heads" if cfg.kv_sharded else None
+    s = {
+        "wq": P((d, h, hd), ("embed", "heads", None), scale=d**-0.5),
+        "wk": P((d, kv, hd), ("embed", kv_ax, None), scale=d**-0.5),
+        "wv": P((d, kv, hd), ("embed", kv_ax, None), scale=d**-0.5),
+        "wo": P((h, hd, d), ("heads", None, "embed"), scale=(h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        s["bq"] = P((h, hd), ("heads", None), init="zeros")
+        s["bk"] = P((kv, hd), (kv_ax, None), init="zeros")
+        s["bv"] = P((kv, hd), (kv_ax, None), init="zeros")
+    if cross:
+        s["gate"] = P((), (), init="zeros")  # gated cross-attn (llama-3.2-v)
+    return s
+
+
+def _ffn_specs(cfg: ArchConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.act in ("silu", "gelu"):
+        return {
+            "wg": P((d, f), ("embed", "ffn"), scale=d**-0.5),
+            "wu": P((d, f), ("embed", "ffn"), scale=d**-0.5),
+            "wd": P((f, d), ("ffn", "embed"), scale=f**-0.5),
+        }
+    return {
+        "wi": P((d, f), ("embed", "ffn"), scale=d**-0.5),
+        "wd": P((f, d), ("ffn", "embed"), scale=f**-0.5),
+    }
+
+
+def _moe_specs(cfg: ArchConfig):
+    m = cfg.moe
+    d, fe = cfg.d_model, cfg.d_ff_e
+    e = m.n_experts
+    s = {
+        "router": P((d, e), ("embed", None), scale=d**-0.5),
+        "we_g": P((e, d, fe), ("experts", "embed", None), scale=d**-0.5),
+        "we_u": P((e, d, fe), ("experts", "embed", None), scale=d**-0.5),
+        "we_d": P((e, fe, d), ("experts", None, "embed"), scale=fe**-0.5),
+    }
+    if m.shared_expert:
+        s["shared"] = _ffn_specs(cfg)
+    if m.dense_residual:
+        s["dense"] = _ffn_specs(cfg)
+    return s
+
+
+def _rwkv_specs(cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner or d
+    h = di // cfg.head_dim
+    # RWKV head count (di/head_dim = 40) does not divide tp=16, so time-mix
+    # projections are *row-parallel* on the contraction dim ('ffn'->model:
+    # psum after each projection); wo shards its head_dim contraction.
+    return {
+        "mu": P((5, d), (None, None), init="ones", scale=0.5),  # token-shift mix
+        "wr": P((d, h, cfg.head_dim), ("ffn", None, None), scale=d**-0.5),
+        "wk": P((d, h, cfg.head_dim), ("ffn", None, None), scale=d**-0.5),
+        "wv": P((d, h, cfg.head_dim), ("ffn", None, None), scale=d**-0.5),
+        "wg": P((d, h, cfg.head_dim), ("ffn", None, None), scale=d**-0.5),
+        "dec_a": P((d, s.dec_lora), ("ffn", None), scale=d**-0.5),
+        "dec_b": P((s.dec_lora, h, cfg.head_dim), (None, None, None), scale=0.1),
+        "dec_lambda": P((h, cfg.head_dim), (None, None), init="decay"),
+        "bonus": P((h, cfg.head_dim), (None, None), scale=0.1),
+        "wo": P((h, cfg.head_dim, d), (None, "ffn", None), scale=di**-0.5),
+        # channel-mix (rwkv FFN) lives in the regular ffn slot
+    }
+
+
+def _mamba_specs(cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner or d
+    return {
+        "w_in": P((d, di), ("embed", "ffn"), scale=d**-0.5),
+        "w_z": P((d, di), ("embed", "ffn"), scale=d**-0.5),
+        "w_b": P((d, s.state), ("embed", None), scale=d**-0.5),
+        "w_c": P((d, s.state), ("embed", None), scale=d**-0.5),
+        "w_dt": P((d, di), ("embed", "ffn"), scale=d**-0.5),
+        "dt_bias": P((di,), ("ffn",), init="ones", scale=0.01),
+        "a_log": P((di,), ("ffn",), init="decay"),
+        "conv": P((s.conv, di), (None, "ffn"), scale=s.conv**-0.5),
+        "w_out": P((di, d), ("ffn", "embed"), scale=di**-0.5),
+        "norm_b": P((di,), ("ffn",), init="ones"),
+    }
+
+
+def _layer_specs(cfg: ArchConfig, spec: LayerSpec):
+    s = {"ln1": P((cfg.d_model,), ("embed",), init="ones")}
+    if spec.attn != "none":
+        s["attn"] = _attn_specs(cfg)
+    if spec.cross:
+        s["xattn"] = _attn_specs(cfg, cross=True)
+        s["ln_x"] = P((cfg.d_model,), ("embed",), init="ones")
+    if spec.ssm:
+        kind = cfg.ssm.kind
+        s["ssm"] = _rwkv_specs(cfg) if kind == "rwkv6" else _mamba_specs(cfg)
+        if spec.attn != "none":  # hymba: fusion scalars for the two branches
+            s["fuse_a"] = P((), (), init="ones")
+            s["fuse_s"] = P((), (), init="ones")
+    s["ln2"] = P((cfg.d_model,), ("embed",), init="ones")
+    s["ffn" if not spec.moe else "moe"] = (
+        _moe_specs(cfg) if spec.moe else _ffn_specs(cfg)
+    )
+    if cfg.post_norm:
+        s["ln1b"] = P((cfg.d_model,), ("embed",), init="ones")
+        s["ln2b"] = P((cfg.d_model,), ("embed",), init="ones")
+    return s
+
+
+def _stack_group(cfg: ArchConfig, unit, repeat: int):
+    unit_specs = {f"sub{i}": _layer_specs(cfg, sp) for i, sp in enumerate(unit)}
+    if repeat == 1:
+        return unit_specs
+    return jax.tree.map(
+        lambda p: p.stacked(repeat), unit_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def vocab_padded(cfg: ArchConfig) -> int:
+    """Vocab rounded up to a tp multiple (seamless 256206, hymba 32001 need
+    padding at tp=16); padded logits are masked in transformer.unembed."""
+    return -(-cfg.vocab // cfg.tp) * cfg.tp
+
+
+def param_specs(cfg: ArchConfig):
+    d, v = cfg.d_model, vocab_padded(cfg)
+    tree = {
+        "embed": P((v, d), ("vocab", "embed"), scale=1.0),
+        "ln_f": P((d,), ("embed",), init="ones"),
+        "groups": [
+            _stack_group(cfg, unit, r) for unit, r in cfg.layer_plan()
+        ],
+    }
+    if not cfg.tie_embeddings:
+        tree["unembed"] = P((d, v), ("embed", "vocab"), scale=d**-0.5)
+    if cfg.meta_tokens:
+        tree["meta"] = P((cfg.meta_tokens, d), (None, "embed"), scale=0.02)
+    if cfg.cross_attn:  # vlm: projection stub for precomputed patch embeddings
+        tree["ctx_proj"] = P((d, d), (None, "embed"), scale=d**-0.5)
+    if cfg.enc_dec:
+        tree["enc_groups"] = [
+            _stack_group(cfg, unit, r) for unit, r in cfg.encoder_plan()
+        ]
+        tree["dec_groups"] = [
+            _stack_group(cfg, unit, r) for unit, r in cfg.decoder_plan()
+        ]
+        tree["ln_enc"] = P((d,), ("embed",), init="ones")
+        tree.pop("groups")
+    return tree
+
+
+def _is_p(x):
+    return isinstance(x, P)
+
+
+def init_params(cfg: ArchConfig, key):
+    """Materialize real (small) parameters — smoke tests and examples."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_p)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(p: P, k):
+        if p.init == "zeros":
+            return jnp.zeros(p.shape, dtype)
+        if p.init == "ones":
+            return (jnp.ones(p.shape) * p.scale).astype(dtype)
+        if p.init == "decay":
+            span = np.linspace(-6.0, -1.0, int(np.prod(p.shape)) or 1)
+            return jnp.asarray(span.reshape(p.shape), dtype)
+        return (jax.random.normal(k, p.shape) * p.scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(p, k) for p, k in zip(leaves, keys)])
+
+
+def shardings(cfg: ArchConfig, mesh, rules: dict):
+    """NamedSharding tree resolved through the logical-axis rules."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def resolve(p: P):
+        spec = tuple(rules.get(a) if a else None for a in p.axes)
+        return NamedSharding(mesh, PartitionSpec(*spec))
+
+    return jax.tree.map(resolve, param_specs(cfg), is_leaf=_is_p)
+
+
+def abstract_params(cfg: ArchConfig, mesh=None, rules: Optional[dict] = None):
+    """ShapeDtypeStruct tree (optionally sharded) — the dry-run path."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    shard_tree = shardings(cfg, mesh, rules) if mesh is not None else None
+
+    def make(p: P, s=None):
+        return jax.ShapeDtypeStruct(p.shape, dtype, sharding=s)
+
+    if shard_tree is None:
+        return jax.tree.map(make, param_specs(cfg), is_leaf=_is_p)
+    return jax.tree.map(make, param_specs(cfg), shard_tree, is_leaf=_is_p)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    total = 0
+    for p in jax.tree.leaves(param_specs(cfg), is_leaf=_is_p):
+        total += int(np.prod(p.shape)) if p.shape else 1
+    return total

@@ -1,0 +1,136 @@
+"""RWKV-6 ("Finch") time-mix: linear attention with data-dependent decay.
+
+Chunked formulation (TPU adaptation): within a chunk of length C the
+per-channel decays are accumulated in log space from the chunk start, so every
+pairwise decay ratio exp(cum[t-1] - cum[tau]) with tau <= t-1 is <= 1 — no
+overflow; the intra-chunk term is a (C, C) masked matmul on the MXU and the
+inter-chunk state is carried as (B, H, K, V). Log-decays are clipped at
+LW_MIN; contributions beyond the clip are < e^{-CHUNK·|LW_MIN|} ≈ 0.
+
+Simplification vs. the full paper config (documented in DESIGN.md): the
+data-dependent *decay* (the Finch contribution) is kept; the data-dependent
+token-shift LoRA is replaced by static learned mix coefficients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 16
+LW_MIN = -8.0
+
+
+def _projections(cfg, p, x, x_prev):
+    """Token-shift mix + r/k/v/g/w projections. x: (B,S,d) f32."""
+    b, s, d = x.shape
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu"].astype(jnp.float32)  # (5, d)
+    xs = [x + mu[i] * (shifted - x) for i in range(5)]  # r,k,v,g,w views
+    r = jnp.einsum("bsd,dhk->bshk", xs[0], p["wr"].astype(jnp.float32))
+    k = jnp.einsum("bsd,dhk->bshk", xs[1], p["wk"].astype(jnp.float32))
+    v = jnp.einsum("bsd,dhk->bshk", xs[2], p["wv"].astype(jnp.float32))
+    g = jnp.einsum("bsd,dhk->bshk", xs[3], p["wg"].astype(jnp.float32))
+    # data-dependent decay (LoRA): lw = -exp(lambda + tanh(x A) B)
+    lora = jnp.einsum(
+        "bsr,rhk->bshk",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xs[4], p["dec_a"].astype(jnp.float32))),
+        p["dec_b"].astype(jnp.float32),
+    )
+    lw = -jnp.exp(p["dec_lambda"].astype(jnp.float32) + lora)
+    lw = jnp.clip(lw, LW_MIN, -1e-6)  # log decay per (B,S,H,K)
+    return r, k, v, g, lw
+
+
+def _chunk_step(carry, inp, u):
+    """One chunk. carry: state (B,H,K,V). inp: r,k,v,lw each (B,C,H,K)."""
+    state = carry
+    r, k, v, lw = inp
+    cum = jnp.cumsum(lw, axis=1)  # (B,C,H,K) log decay from chunk start
+    # inter-chunk: y_t += (r_t ⊙ exp(cum_{t-1})) @ state
+    q_dec = r * jnp.exp(cum - lw)  # exp(cum_{t-1}) = exp(cum_t - lw_t)
+    y_inter = jnp.einsum("bchk,bhkv->bchv", q_dec, state)
+    # intra-chunk: A[t,tau] = sum_k r_t exp(cum_{t-1}) * k_tau exp(-cum_tau), tau < t
+    k_dec = k * jnp.exp(-cum)
+    att = jnp.einsum("bchk,bdhk->bhcd", q_dec, k_dec)  # (B,H,C,C)
+    c = r.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    att = jnp.where(tri[None, None], att, 0.0)
+    y_intra = jnp.einsum("bhcd,bdhv->bchv", att, v)
+    # bonus (current token) term: u ⊙ k_t
+    y_bonus = jnp.einsum("bchk,bchv->bchv", r * (u * k), v)
+    # state update: S' = diag(exp(cum_C)) S + sum_tau exp(cum_C - cum_tau) k_tau v_tau^T
+    decay_all = jnp.exp(cum[:, -1:])  # (B,1,H,K)
+    k_tail = k * jnp.exp(cum[:, -1:] - cum)
+    state = decay_all[:, 0][..., None] * state + jnp.einsum(
+        "bchk,bchv->bhkv", k_tail, v
+    )
+    return state, y_inter + y_intra + y_bonus
+
+
+def rwkv6_mix(cfg, p, x, x_prev=None, state=None):
+    """Full-sequence RWKV6 time-mix. x: (B,S,d). Returns (out, (x_last, state))."""
+    b, s, d = x.shape
+    h = (cfg.ssm.d_inner or d) // cfg.head_dim
+    hd = cfg.head_dim
+    xf = x.astype(jnp.float32)
+    if x_prev is None:
+        x_prev = jnp.zeros((b, d), jnp.float32)
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+    r, k, v, g, lw = _projections(cfg, p, xf, x_prev.astype(jnp.float32))
+    u = p["bonus"].astype(jnp.float32)
+
+    pad = (-s) % CHUNK
+
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    # Padded steps get lw=0 (decay=1) and k=v=0, leaving the state intact.
+    rc, kc, vc, lwc = (
+        t.reshape(b, -1, CHUNK, h, hd)
+        for t in (pad_t(r), pad_t(k), pad_t(v), pad_t(lw))
+    )
+
+    def step(carry, inp):
+        return _chunk_step(carry, inp, u)
+
+    state, ys = jax.lax.scan(
+        step, state,
+        (jnp.moveaxis(rc, 1, 0), jnp.moveaxis(kc, 1, 0),
+         jnp.moveaxis(vc, 1, 0), jnp.moveaxis(lwc, 1, 0)),
+    )
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, -1, h, hd)[:, :s]
+    y = y * jax.nn.silu(g)  # output gate
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(jnp.float32))
+    return out.astype(x.dtype), (xf[:, -1, :], state)
+
+
+def rwkv6_decode(cfg, p, x, x_prev, state):
+    """One-token recurrence. x: (B,1,d). Returns (out, (x_last, state))."""
+    b, _, d = x.shape
+    h = (cfg.ssm.d_inner or d) // cfg.head_dim
+    hd = cfg.head_dim
+    xf = x.astype(jnp.float32)
+    r, k, v, g, lw = _projections(cfg, p, xf, x_prev.astype(jnp.float32))
+    u = p["bonus"].astype(jnp.float32)
+    r1, k1, v1, lw1 = (t[:, 0] for t in (r, k, v, lw))  # (B,H,K)
+    y = jnp.einsum("bhk,bhkv->bhv", r1, state) + jnp.einsum(
+        "bhk,bhv->bhv", r1 * (u * k1), v1
+    )
+    state = jnp.exp(lw1)[..., None] * state + jnp.einsum("bhk,bhv->bhkv", k1, v1)
+    y = (y * jax.nn.silu(g[:, 0]))[:, None]
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"].astype(jnp.float32))
+    return out.astype(x.dtype), (xf[:, -1, :], state)
+
+
+def rwkv6_mix_ref(cfg, p, x):
+    """Sequential-scan oracle for tests: step-by-step decode over the sequence."""
+    b, s, d = x.shape
+    h = (cfg.ssm.d_inner or d) // cfg.head_dim
+    x_prev = jnp.zeros((b, d), jnp.float32)
+    state = jnp.zeros((b, h, cfg.head_dim, cfg.head_dim), jnp.float32)
+    outs = []
+    for t in range(s):
+        o, (x_prev, state) = rwkv6_decode(cfg, p, x[:, t : t + 1], x_prev, state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,267 @@
+"""Model assembly: layer dispatch, scanned layer groups, train/prefill/decode.
+
+One generic stack serves all 10 assigned architectures; the per-layer
+``LayerSpec`` chooses the sequence mixer (global/local attention, RWKV6,
+Mamba branch, cross-attention) and FFN (dense / MoE). Layer groups are
+``lax.scan``-ed over stacked parameters with per-layer rematerialization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import mamba as M
+from repro.models import rwkv as R
+from repro.models.common import ShardCtx, rms_norm, softcap
+from repro.models.config import ArchConfig, LayerSpec
+
+
+def _branch_norm(x, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(jnp.square(x.astype(jnp.float32)), -1,
+                                      keepdims=True) + eps).astype(x.dtype)
+
+
+def init_layer_cache(cfg: ArchConfig, spec: LayerSpec, batch: int, max_len: int,
+                     n_ctx: int = 0):
+    """Decode cache slots for one layer."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    c = {}
+    if spec.attn != "none":
+        window = cfg.window if spec.attn == "local" else 0
+        c["attn"] = A.init_attn_cache(cfg, batch, max_len, window, dt)
+    if spec.cross:
+        kv = cfg.kv_padded
+        c["xk"] = jnp.zeros((batch, n_ctx, kv, cfg.head_dim), dt)
+        c["xv"] = jnp.zeros((batch, n_ctx, kv, cfg.head_dim), dt)
+    if spec.ssm:
+        d = cfg.d_model
+        di = cfg.ssm.d_inner or d
+        if cfg.ssm.kind == "rwkv6":
+            h = di // cfg.head_dim
+            c["ssm"] = {
+                "x_prev": jnp.zeros((batch, d), jnp.float32),
+                "state": jnp.zeros((batch, h, cfg.head_dim, cfg.head_dim), jnp.float32),
+            }
+        else:
+            c["ssm"] = {
+                "conv": jnp.zeros((batch, cfg.ssm.conv - 1, di), jnp.float32),
+                "h": jnp.zeros((batch, di, cfg.ssm.state), jnp.float32),
+            }
+    return c
+
+
+def layer_fwd(cfg: ArchConfig, spec: LayerSpec, p, x, positions, sctx: ShardCtx,
+              *, mode: str = "train", cache=None, pos=None, ctx_tokens=None):
+    """One transformer layer. Returns (x, new_cache)."""
+    new_cache = {}
+    p = sctx.use_weights(p)  # ZeRO-3: all-gather stored shards at use
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    mixed = None
+
+    if spec.attn != "none":
+        window = cfg.window if spec.attn == "local" else 0
+        if mode == "decode":
+            attn_out, new_cache["attn"] = A.decode_attention(
+                cfg, p["attn"], h, cache["attn"], pos, window=window
+            )
+        else:
+            attn_out, (k, v) = A.self_attention(
+                cfg, p["attn"], h, positions, causal=spec.causal, window=window
+            )
+            if mode == "prefill":
+                new_cache["attn"] = A.prefill_attn_cache(cache["attn"], k, v, positions)
+        mixed = attn_out
+
+    if spec.ssm:
+        if cfg.ssm.kind == "rwkv6":
+            if mode == "decode":
+                ssm_out, (xp, st) = R.rwkv6_decode(
+                    cfg, p["ssm"], h, cache["ssm"]["x_prev"], cache["ssm"]["state"]
+                )
+            else:
+                ssm_out, (xp, st) = R.rwkv6_mix(cfg, p["ssm"], h)
+            if mode in ("decode", "prefill"):
+                new_cache["ssm"] = {"x_prev": xp, "state": st}
+        else:
+            if mode == "decode":
+                ssm_out, (cs, hh) = M.mamba_decode(
+                    cfg, p["ssm"], h, cache["ssm"]["conv"], cache["ssm"]["h"]
+                )
+            else:
+                ssm_out, (cs, hh) = M.mamba_mix(cfg, p["ssm"], h)
+            if mode in ("decode", "prefill"):
+                new_cache["ssm"] = {"conv": cs, "h": hh}
+        if mixed is None:
+            mixed = ssm_out
+        else:  # hymba: normalized fusion of the two branches
+            mixed = (
+                p["fuse_a"].astype(mixed.dtype) * _branch_norm(mixed)
+                + p["fuse_s"].astype(mixed.dtype) * _branch_norm(ssm_out)
+            ) * 0.5
+
+    if cfg.post_norm:
+        mixed = rms_norm(mixed, p["ln1b"], cfg.norm_eps)
+    x = x + mixed
+
+    if spec.cross:
+        hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+        if mode == "decode":
+            kv = (cache["xk"], cache["xv"])
+            new_cache["xk"], new_cache["xv"] = kv
+        else:
+            kv = A.ctx_kv(cfg, p["xattn"], ctx_tokens)
+            if mode == "prefill":
+                new_cache["xk"], new_cache["xv"] = kv
+        x = x + A.cross_attention(cfg, p["xattn"], hx, kv)
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if spec.moe:
+        ffn_out = F.moe_ffn(cfg, p["moe"], h2, sctx)
+    else:
+        ffn_out = F.dense_ffn(cfg, p["ffn"], h2)
+    if cfg.post_norm:
+        ffn_out = rms_norm(ffn_out, p["ln2b"], cfg.norm_eps)
+    x = x + ffn_out
+    return x, new_cache
+
+
+def _unit_fwd(cfg, unit, p_unit, x, positions, sctx, *, mode, cache=None,
+              pos=None, ctx_tokens=None, remat=True):
+    def run(x, p_unit, cache_in):
+        new_caches = {}
+        for i, spec in enumerate(unit):
+            c = cache_in.get(f"sub{i}") if cache_in else None
+            x, nc = layer_fwd(cfg, spec, p_unit[f"sub{i}"], x, positions, sctx,
+                              mode=mode, cache=c, pos=pos, ctx_tokens=ctx_tokens)
+            new_caches[f"sub{i}"] = nc
+        return x, new_caches
+
+    if remat and mode == "train":
+        run = jax.checkpoint(run)
+    return run(x, p_unit, cache or {})
+
+
+def groups_fwd(cfg, groups_params, plan, x, positions, sctx, *, mode="train",
+               caches=None, pos=None, ctx_tokens=None):
+    """Run all layer groups; scanned when repeat > 1. Returns (x, new_caches)."""
+    new_caches = []
+    for gi, ((unit, repeat), gp) in enumerate(zip(plan, groups_params)):
+        cache_g = caches[gi] if caches is not None else None
+        if repeat == 1:
+            x, nc = _unit_fwd(cfg, unit, gp, x, positions, sctx, mode=mode,
+                              cache=cache_g, pos=pos, ctx_tokens=ctx_tokens)
+            new_caches.append(nc)
+        elif cache_g is None:
+            def body_nc(x, lp):
+                x, _ = _unit_fwd(cfg, unit, lp, x, positions, sctx, mode=mode,
+                                 ctx_tokens=ctx_tokens)
+                return x, None
+
+            x, _ = jax.lax.scan(body_nc, x, gp)
+            new_caches.append(None)
+        else:
+            def body(x, scanned):
+                lp, lc = scanned
+                x, nc = _unit_fwd(cfg, unit, lp, x, positions, sctx, mode=mode,
+                                  cache=lc, pos=pos, ctx_tokens=ctx_tokens)
+                return x, nc
+
+            x, ncs = jax.lax.scan(body, x, (gp, cache_g))
+            new_caches.append(ncs)
+    return x, new_caches
+
+
+def init_cache(cfg: ArchConfig, plan, batch: int, max_len: int, n_ctx: int = 0):
+    caches = []
+    for unit, repeat in plan:
+        unit_c = {
+            f"sub{i}": init_layer_cache(cfg, spec, batch, max_len, n_ctx)
+            for i, spec in enumerate(unit)
+        }
+        if repeat > 1:
+            unit_c = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (repeat,) + a.shape), unit_c
+            )
+        caches.append(unit_c)
+    return caches
+
+
+# ---------------------------------------------------------------- full model
+def embed_tokens(cfg, params, tokens):
+    dt = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(dt)
+    return x * jnp.asarray(cfg.d_model**0.5, dt)
+
+
+def unembed(cfg, params, x):
+    table = params.get("unembed")
+    if table is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, table)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    v_pad = logits.shape[-1]
+    if v_pad != cfg.vocab:  # mask tp-padding columns (see params.vocab_padded)
+        keep = jnp.arange(v_pad) < cfg.vocab
+        logits = jnp.where(keep, logits, -1e30)
+    return logits
+
+
+def forward(cfg: ArchConfig, params, tokens, sctx: ShardCtx = ShardCtx(), *,
+            ctx_tokens=None, enc_embeds=None, mode="train", caches=None,
+            pos=None):
+    """Decoder forward. tokens: (B,S) int32 (decode: (B,1)).
+
+    ctx_tokens: VLM patch embeddings (B,N,d) or enc-dec encoder output.
+    Returns (logits, new_caches).
+    """
+    if sctx.gather_weights:  # ZeRO-3: embed/head shards gathered at use too
+        top = {k: v for k, v in params.items()
+               if k not in ("groups", "enc_groups", "dec_groups")}
+        params = {**params, **sctx.use_weights(top)}
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params, tokens)
+    if cfg.meta_tokens and mode != "decode":
+        meta = jnp.broadcast_to(
+            params["meta"].astype(x.dtype)[None], (b, cfg.meta_tokens, x.shape[-1])
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+        s = s + cfg.meta_tokens
+    if ctx_tokens is not None and "ctx_proj" in params:
+        ctx_tokens = jnp.einsum(
+            "bnd,de->bne", ctx_tokens.astype(x.dtype), params["ctx_proj"]
+        )
+    if mode == "decode":
+        positions = None
+        plan = cfg.decoder_plan() if cfg.enc_dec else cfg.layer_plan()
+        groups = params["dec_groups"] if cfg.enc_dec else params["groups"]
+        x, new_caches = groups_fwd(cfg, groups, plan, x, positions, sctx,
+                                   mode="decode", caches=caches, pos=pos,
+                                   ctx_tokens=ctx_tokens)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        plan = cfg.decoder_plan() if cfg.enc_dec else cfg.layer_plan()
+        groups = params["dec_groups"] if cfg.enc_dec else params["groups"]
+        x, new_caches = groups_fwd(cfg, groups, plan, x, positions, sctx,
+                                   mode=mode, caches=caches,
+                                   ctx_tokens=ctx_tokens)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.meta_tokens and mode != "decode":
+        x = x[:, cfg.meta_tokens :]
+    logits = unembed(cfg, params, x)
+    return logits, new_caches
+
+
+def encode(cfg: ArchConfig, params, enc_embeds, sctx: ShardCtx = ShardCtx()):
+    """Enc-dec encoder over precomputed frame embeddings (B,S,d)."""
+    b, s, _ = enc_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = enc_embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x, _ = groups_fwd(cfg, params["enc_groups"], cfg.encoder_plan(), x,
+                      positions, sctx, mode="train")
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)

@@ -1,0 +1,65 @@
+"""Serving steps: prefill (prompt -> KV caches) and decode (one token/step).
+
+``serve_step`` is the unit the decode/long-context dry-run cells lower: one new
+token against a KV cache of ``max_len`` (ring-bounded for local-attention
+layers, constant-size recurrent state for SSM layers).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ShardCtx
+
+
+def _plan(cfg):
+    return cfg.decoder_plan() if cfg.enc_dec else cfg.layer_plan()
+
+
+def make_prefill_step(cfg, sctx: ShardCtx = ShardCtx(), *, max_len: int,
+                      n_ctx: int = 0):
+    def prefill(params, tokens, ctx_tokens=None, enc_embeds=None):
+        b = tokens.shape[0]
+        caches = T.init_cache(cfg, _plan(cfg), b, max_len, n_ctx)
+        if cfg.enc_dec:
+            ctx_tokens = T.encode(cfg, params, enc_embeds, sctx)
+        logits, caches = T.forward(cfg, params, tokens, sctx,
+                                   ctx_tokens=ctx_tokens, mode="prefill",
+                                   caches=caches)
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_serve_step(cfg, sctx: ShardCtx = ShardCtx(), sample: str = "greedy"):
+    def serve(params, caches, tokens, pos):
+        """tokens: (B,1) previous token; pos: () absolute position."""
+        logits, caches = T.forward(cfg, params, tokens, sctx, mode="decode",
+                                   caches=caches, pos=pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        return nxt, caches
+
+    return serve
+
+
+def generate(cfg, params, prompt, steps: int, sctx: ShardCtx = ShardCtx(), *,
+             max_len: Optional[int] = None, ctx_tokens=None, enc_embeds=None):
+    """Greedy generation loop (examples/tests; production uses the launcher)."""
+    max_len = max_len or (prompt.shape[1] + steps + cfg.meta_tokens)
+    prefill = make_prefill_step(
+        cfg, sctx, max_len=max_len,
+        n_ctx=0 if ctx_tokens is None and enc_embeds is None else
+        (ctx_tokens.shape[1] if ctx_tokens is not None else enc_embeds.shape[1]))
+    serve = jax.jit(make_serve_step(cfg, sctx))
+    logits, caches = prefill(params, prompt, ctx_tokens=ctx_tokens,
+                             enc_embeds=enc_embeds)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    pos = prompt.shape[1] + cfg.meta_tokens
+    for i in range(steps - 1):
+        tok, caches = serve(params, caches, tok, jnp.asarray(pos + i, jnp.int32))
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

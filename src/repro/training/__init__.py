@@ -1,0 +1,2 @@
+from repro.training.optimizer import adafactor, adamw
+from repro.training.train_loop import make_train_step

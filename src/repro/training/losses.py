@@ -1,0 +1,27 @@
+"""Training losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ShardCtx
+
+
+def lm_loss(cfg, params, batch, sctx: ShardCtx = ShardCtx()):
+    """Next-token cross entropy. batch: {'tokens', 'labels', ['ctx'|'enc']}.
+
+    labels == -1 positions are masked out.
+    """
+    ctx_tokens = batch.get("ctx")
+    if cfg.enc_dec:
+        enc_out = T.encode(cfg, params, batch["enc"], sctx)
+        ctx_tokens = enc_out
+    logits, _ = T.forward(cfg, params, batch["tokens"], sctx,
+                          ctx_tokens=ctx_tokens, mode="train")
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels.clip(0)[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)

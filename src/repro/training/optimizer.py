@@ -1,0 +1,124 @@
+"""Optimizers built from scratch (optax is unavailable offline).
+
+- ``adamw``: fp32 m/v state; the default for <=10B dense archs.
+- ``adafactor``: factored second moment (row/col statistics for >=2D params),
+  no momentum — state is O(rows+cols) instead of O(n). Default for the
+  100B+ MoE archs where AdamW state (+8 bytes/param) would not fit a v5e pod
+  (see DESIGN.md memory model).
+
+Both return an ``Optimizer`` with pure ``init`` / ``update`` functions
+suitable for pjit (state mirrors the parameter sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, new_state)
+    name: str = "opt"
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32) * (p.ndim >= 2)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(eps=1e-30, clip_threshold=1.0, decay=0.8, weight_decay=0.0) -> Optimizer:
+    """Factored RMS (Shazeer & Stern 2018), momentum-free."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def state_for(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(state_for, params,
+                              is_leaf=lambda x: isinstance(x, (jax.Array, jax.ShapeDtypeStruct))),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        rho = 1.0 - t ** (-decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if _factored(p):
+                vr = rho * s["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * s["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                v_hat = (vr[..., None] * vc[..., None, :]) / denom[..., None]
+                u = g / jnp.sqrt(v_hat)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = rho * s["v"] + (1 - rho) * g2
+                u = g / jnp.sqrt(v)
+                new_s = {"v": v}
+            # update clipping (RMS(u) <= clip_threshold)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            u = u + weight_decay * p.astype(jnp.float32) * (p.ndim >= 2)
+            new_p = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return new_p, new_s
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["v"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_v = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"v": new_v, "step": step}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,55 @@
+"""Minimal gradient-based minimizer (Adam) used by offline model fitting.
+
+optax is unavailable offline; this is a self-contained pytree Adam driven by
+``jax.lax.scan`` so the full optimization is one compiled program.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def adam_minimize(
+    loss_fn: Callable,
+    params,
+    *,
+    steps: int = 200,
+    lr: float = 0.05,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """Minimize ``loss_fn(params)`` with Adam; returns (params, loss_history)."""
+
+    grad_fn = jax.value_and_grad(loss_fn)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, i):
+        p, m, v = carry
+        loss, g = grad_fn(p)
+        # Guard against non-finite gradients (ill-conditioned Cholesky regions):
+        # skip the update rather than poisoning the state.
+        ok = jnp.isfinite(loss) & jax.tree_util.tree_reduce(
+            lambda a, leaf: a & jnp.all(jnp.isfinite(leaf)), g, jnp.bool_(True)
+        )
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * jnp.where(ok, g_, 0.0), m, g)
+        v = jax.tree.map(
+            lambda v_, g_: b2 * v_ + (1 - b2) * jnp.where(ok, g_ * g_, 0.0), v, g
+        )
+        t = i + 1
+        mhat = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+        p = jax.tree.map(
+            lambda p_, mh, vh: p_ - jnp.where(ok, lr * mh / (jnp.sqrt(vh) + eps), 0.0),
+            p,
+            mhat,
+            vhat,
+        )
+        return (p, m, v), loss
+
+    (params, _, _), hist = jax.lax.scan(
+        step, (params, zeros, zeros), jnp.arange(steps, dtype=jnp.float64)
+    )
+    return params, hist

@@ -1,0 +1,30 @@
+"""Small helpers for dataclass-based pytrees (no flax/equinox offline)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def pytree_dataclass(cls=None, *, meta_fields: tuple = ()):
+    """Register a frozen dataclass as a jax pytree.
+
+    ``meta_fields`` are static (hashed into the treedef); everything else is a leaf
+    subtree.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=tuple(meta_fields)
+        )
+        return c
+
+    return wrap(cls) if cls is not None else wrap
+
+
+def replace(obj, **kw):
+    return dataclasses.replace(obj, **kw)

@@ -1,0 +1,13 @@
+"""Normal-distribution helpers used by error bounds and model validation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.scipy.special import erfinv
+
+
+def confidence_multiplier(delta):
+    """alpha_delta: a standard normal falls within (-alpha, alpha) w.p. ``delta``.
+
+    Section 3.4 of the paper ("confidence interval multiplier").
+    """
+    return jnp.sqrt(2.0) * erfinv(jnp.asarray(delta))

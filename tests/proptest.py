@@ -1,0 +1,73 @@
+"""Tiny property-based-testing shim (hypothesis is unavailable offline).
+
+Provides seeded random-case generation with failure reporting that prints the
+seed and generated arguments so cases are reproducible. API intentionally
+mirrors the hypothesis style loosely: ``@given(cases(...))``.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import numpy as np
+
+
+class Gen:
+    """A generator of random values given a numpy Generator."""
+
+    def __init__(self, fn, desc=""):
+        self.fn = fn
+        self.desc = desc
+
+    def __call__(self, rng):
+        return self.fn(rng)
+
+
+def floats(lo, hi):
+    return Gen(lambda rng: float(rng.uniform(lo, hi)), f"floats[{lo},{hi}]")
+
+
+def ints(lo, hi):
+    return Gen(lambda rng: int(rng.integers(lo, hi + 1)), f"ints[{lo},{hi}]")
+
+
+def arrays(shape_gen, lo=-1.0, hi=1.0):
+    def make(rng):
+        shape = shape_gen(rng) if callable(shape_gen) else shape_gen
+        return rng.uniform(lo, hi, size=shape)
+
+    return Gen(make, "arrays")
+
+
+def choice(options):
+    return Gen(lambda rng: options[int(rng.integers(0, len(options)))], f"choice{options}")
+
+
+def given(n_cases: int = 25, seed: int = 0, **gens):
+    """Run the test for ``n_cases`` random draws of the declared generators."""
+
+    def deco(fn):
+        def wrapper():
+            for case in range(n_cases):
+                rng = np.random.default_rng(seed * 100003 + case)
+                drawn = {k: g(rng) for k, g in gens.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:  # pragma: no cover - reporting path
+                    raise AssertionError(
+                        f"property failed on case {case} (seed={seed}): "
+                        f"{ {k: _short(v) for k, v in drawn.items()} }: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco
+
+
+def _short(v):
+    a = np.asarray(v)
+    if a.ndim == 0 or a.size <= 8:
+        return v
+    return f"array{a.shape} mean={a.mean():.4g}"

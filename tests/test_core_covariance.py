@@ -1,0 +1,133 @@
+"""Covariance math: closed form vs quadrature, limits, structure properties."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import covariance as C
+from repro.core.types import AVG, FREQ, GPParams, Schema, make_snippets
+import proptest as pt
+
+
+def quad_double_integral(a, b, c, d, z, n=400):
+    xs = np.linspace(a, b, n)
+    ys = np.linspace(c, d, n)
+    dx = (b - a) / (n - 1)
+    dy = (d - c) / (n - 1)
+    xx, yy = np.meshgrid(xs, ys, indexing="ij")
+    f = np.exp(-((xx - yy) ** 2) / z**2)
+    # trapezoid weights
+    wx = np.ones(n); wx[0] = wx[-1] = 0.5
+    wy = np.ones(n); wy[0] = wy[-1] = 0.5
+    return float((f * wx[:, None] * wy[None, :]).sum() * dx * dy)
+
+
+@pt.given(n_cases=20, a=pt.floats(0, 0.5), w1=pt.floats(0.01, 0.5),
+          c=pt.floats(0, 0.5), w2=pt.floats(0.01, 0.5), z=pt.floats(0.05, 2.0))
+def test_double_integral_matches_quadrature(a, w1, c, w2, z):
+    got = float(C.se_double_integral(a, a + w1, c, c + w2, z))
+    want = quad_double_integral(a, a + w1, c, c + w2, z)
+    assert got == pytest.approx(want, rel=2e-3, abs=1e-9)
+
+
+def test_double_integral_symmetry_and_positivity():
+    g1 = float(C.se_double_integral(0.1, 0.4, 0.6, 0.9, 0.3))
+    g2 = float(C.se_double_integral(0.6, 0.9, 0.1, 0.4, 0.3))
+    assert g1 == pytest.approx(g2, rel=1e-12)
+    assert g1 > 0
+
+
+def _schema(l=2, cats=(4,), m=1):
+    return Schema(num_lo=(0.0,) * l, num_hi=(1.0,) * l, cat_sizes=cats, n_measures=m)
+
+
+def test_point_limit_equals_kernel():
+    """Normalized AVG covariance of two equality predicates -> SE kernel."""
+    sch = _schema()
+    p = GPParams.init(sch)
+    b = make_snippets(
+        sch, agg=AVG, measure=0,
+        num_ranges=[{0: (0.2, 0.2), 1: (0.5, 0.5)}, {0: (0.6, 0.6), 1: (0.5, 0.5)}],
+        cat_sets=[{0: (1,)}, {0: (1,)}],
+    )
+    cov = np.asarray(C.cov_matrix(b, b, p))
+    expected = np.exp(-((0.2 - 0.6) ** 2) / 1.0**2)  # ls=1, sigma2=1
+    assert cov[0, 1] == pytest.approx(expected, rel=1e-3)
+    assert cov[0, 0] == pytest.approx(1.0, rel=1e-3)
+
+
+def test_cov_diag_matches_matrix_diagonal():
+    sch = _schema()
+    p = GPParams.init(sch)
+    b = make_snippets(
+        sch, agg=[AVG, FREQ], measure=[0, 0],
+        num_ranges=[{0: (0.1, 0.6)}, {1: (0.3, 0.9)}],
+        cat_sets=[{}, {0: (0, 2)}],
+    )
+    full = np.asarray(C.cov_matrix(b, b, p))
+    diag = np.asarray(C.cov_diag(b, p))
+    np.testing.assert_allclose(np.diag(full), diag, rtol=1e-10)
+
+
+def test_cov_matrix_symmetric_psd():
+    sch = _schema(l=3, cats=(5, 3))
+    p = GPParams(log_ls=jnp.log(jnp.asarray([0.3, 0.5, 1.0])),
+                 log_sigma2=jnp.log(2.0), mu=jnp.asarray(0.0))
+    rng = np.random.default_rng(0)
+    n = 12
+    ranges = []
+    cat_sets = []
+    for _ in range(n):
+        r = {}
+        for d in range(3):
+            if rng.random() < 0.7:
+                a = rng.uniform(0, 0.7)
+                r[d] = (a, a + rng.uniform(0.05, 0.3))
+        ranges.append(r)
+        cs = {}
+        if rng.random() < 0.5:
+            cs[0] = tuple(rng.choice(5, size=2, replace=False).tolist())
+        cat_sets.append(cs)
+    b = make_snippets(sch, agg=AVG, measure=0, num_ranges=ranges, cat_sets=cat_sets)
+    cov = np.asarray(C.cov_matrix(b, b, p))
+    np.testing.assert_allclose(cov, cov.T, rtol=1e-10)
+    evals = np.linalg.eigvalsh(cov)
+    assert evals.min() > -1e-8 * evals.max()
+
+
+def test_disjoint_categorical_zero_covariance():
+    sch = _schema()
+    p = GPParams.init(sch)
+    b = make_snippets(
+        sch, agg=FREQ, measure=0,
+        num_ranges=[{0: (0.0, 1.0)}, {0: (0.0, 1.0)}],
+        cat_sets=[{0: (0, 1)}, {0: (2, 3)}],
+    )
+    cov = np.asarray(C.cov_matrix(b, b, p))
+    assert cov[0, 1] == pytest.approx(0.0, abs=1e-12)
+
+
+def test_avg_normalization_shrinks_with_category_width():
+    """AVG over more independent categories has smaller prior variance."""
+    sch = _schema()
+    p = GPParams.init(sch)
+    b = make_snippets(
+        sch, agg=AVG, measure=0,
+        num_ranges=[{}, {}],
+        cat_sets=[{0: (0,)}, {0: (0, 1, 2, 3)}],
+    )
+    d = np.asarray(C.cov_diag(b, p))
+    assert d[1] < d[0]
+
+
+def test_freq_additive_over_categories():
+    """FREQ variance over V categories = V * single-category variance."""
+    sch = _schema()
+    p = GPParams.init(sch)
+    b = make_snippets(
+        sch, agg=FREQ, measure=0,
+        num_ranges=[{}, {}],
+        cat_sets=[{0: (0,)}, {0: (0, 1, 2, 3)}],
+    )
+    d = np.asarray(C.cov_diag(b, p))
+    assert d[1] == pytest.approx(4 * d[0], rel=1e-9)

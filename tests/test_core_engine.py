@@ -1,0 +1,190 @@
+"""End-to-end Verdict engine behaviour: error reduction, speedup, validation,
+learning recovery (Fig. 7), append adjustment (App. D), Theorem 1 at system level."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.aqp import workload as W
+from repro.aqp.queries import AggQuery, AggSpec, Disjunction, NumRange, TextLike
+from repro.core import covariance as C
+from repro.core import learning
+from repro.core.append import estimate_append_stats
+from repro.core.engine import EngineConfig, VerdictEngine
+from repro.core.types import AVG, GPParams, RawAnswer, Schema, make_snippets
+from repro.core.synopsis import Synopsis
+
+
+@pytest.fixture(scope="module")
+def relation():
+    return W.make_relation(seed=0, n_rows=20_000, n_num=2, cat_sizes=(4,),
+                           n_measures=1, lengthscale=0.4, noise=0.2)
+
+
+@pytest.fixture(scope="module")
+def trained_engines(relation):
+    train_q = W.make_workload(1, relation.schema, 40, agg_kinds=("AVG",),
+                              width_range=(0.15, 0.5), cat_pred_prob=0.2)
+    cfg_v = EngineConfig(sample_rate=0.15, n_batches=8, capacity=256, seed=0)
+    cfg_n = EngineConfig(sample_rate=0.15, n_batches=8, capacity=256, seed=0,
+                         learning=False)
+    verdict = VerdictEngine(relation, cfg_v)
+    nolearn = VerdictEngine(relation, cfg_n)
+    for q in train_q:
+        verdict.execute(q, max_batches=8)
+    verdict.refit(steps=80)
+    return verdict, nolearn
+
+
+def _exact(relation, engine, q):
+    groups = engine._discover_groups(q)
+    from repro.aqp.queries import assemble_results, decompose
+
+    plan = decompose(relation.schema, q, groups)
+    theta = relation.exact_answer(plan.snippets)
+    cells = assemble_results(plan, theta, np.zeros(plan.snippets.n), relation.cardinality)
+    return {(c["group"], c["agg"]): c["estimate"] for c in cells}
+
+
+def test_engine_reduces_error_bounds_and_actual_error(relation, trained_engines):
+    verdict, nolearn = trained_engines
+    test_q = W.make_workload(2, relation.schema, 15, agg_kinds=("AVG",),
+                             width_range=(0.15, 0.5), cat_pred_prob=0.2)
+    imp_bounds, raw_bounds, imp_errs, raw_errs = [], [], [], []
+    n_accepted = 0
+    for q in test_q:
+        rv = verdict.execute(q, max_batches=2)
+        rn = nolearn.execute(q, max_batches=2)
+        exact = _exact(relation, verdict, q)
+        for cv, cn in zip(rv.cells, rn.cells):
+            ex = exact[(cv["group"], cv["agg"])]
+            if abs(ex) < 1e-9:
+                continue
+            imp_bounds.append(np.sqrt(cv["beta2"]) / abs(ex))
+            raw_bounds.append(np.sqrt(cn["beta2"]) / abs(ex))
+            imp_errs.append(abs(cv["estimate"] - ex) / abs(ex))
+            raw_errs.append(abs(cn["estimate"] - ex) / abs(ex))
+        n_accepted += int(np.asarray(rv.snippet_answer.accepted).sum())
+    # Theorem 1 at the system level: bounds never worse on average, and the
+    # learned model should measurably shrink both bounds and actual errors.
+    assert np.mean(imp_bounds) < np.mean(raw_bounds)
+    assert np.mean(imp_errs) < np.mean(raw_errs) * 1.05
+    assert n_accepted > 0  # the model is actually being used
+
+
+def test_engine_speedup_batches_to_target(relation, trained_engines):
+    verdict, nolearn = trained_engines
+    test_q = W.make_workload(3, relation.schema, 10, agg_kinds=("AVG",),
+                             width_range=(0.2, 0.5), cat_pred_prob=0.0)
+    v_batches = n_batches = 0
+    for q in test_q:
+        rv = verdict.execute(q, target_rel_error=0.02)
+        rn = nolearn.execute(q, target_rel_error=0.02)
+        v_batches += rv.batches_used
+        n_batches += rn.batches_used
+    assert v_batches <= n_batches  # Verdict reaches the target no slower
+
+
+def test_snippet_level_theorem1(relation, trained_engines):
+    verdict, _ = trained_engines
+    q = W.make_workload(4, relation.schema, 5, agg_kinds=("AVG",))[0]
+    r = verdict.execute(q, max_batches=3)
+    imp = r.snippet_answer
+    assert np.all(np.asarray(imp.beta2) <= np.asarray(imp.raw_beta2) + 1e-12)
+
+
+def test_unsupported_query_bypasses_learning(relation):
+    eng = VerdictEngine(relation, EngineConfig(sample_rate=0.1, n_batches=4))
+    q = AggQuery(aggs=(AggSpec("AVG", 0),),
+                 predicates=(TextLike("%apple%"), NumRange(0, 1.0, 5.0)))
+    r = eng.execute(q)
+    assert not r.supported and "textual" in r.unsupported_reason
+    assert len(eng.synopses) == 0  # nothing recorded
+    q2 = AggQuery(aggs=(AggSpec("MIN", 0),), predicates=())
+    assert not eng.execute(q2).supported
+
+
+def test_groupby_and_sum_count(relation):
+    eng = VerdictEngine(relation, EngineConfig(sample_rate=0.2, n_batches=4))
+    q = AggQuery(aggs=(AggSpec("AVG", 0), AggSpec("COUNT"), AggSpec("SUM", 0)),
+                 predicates=(NumRange(0, 2.0, 8.0),), groupby=(0,))
+    r = eng.execute(q)
+    assert r.supported
+    groups = {c["group"] for c in r.cells}
+    assert len(groups) == 4  # all 4 categories present
+    exact = _exact(relation, eng, q)
+    for c in r.cells:
+        ex = exact[(c["group"], c["agg"])]
+        err = abs(c["estimate"] - ex) / max(abs(ex), 1e-9)
+        assert err < 0.2, (c, ex)
+
+
+def test_validation_rejects_corrupt_model(relation):
+    eng = VerdictEngine(relation, EngineConfig(sample_rate=0.15, n_batches=4,
+                                               capacity=128))
+    for q in W.make_workload(5, relation.schema, 10, agg_kinds=("AVG",)):
+        eng.execute(q)
+    # Corrupt the model: shift the prior mean absurdly and rebuild.
+    for syn in eng.synopses.values():
+        syn.params = GPParams(log_ls=syn.params.log_ls - 5.0,  # tiny ls
+                              log_sigma2=syn.params.log_sigma2 + 8.0,
+                              mu=syn.params.mu + 1e3)
+        syn.rebuild()
+    q = W.make_workload(6, relation.schema, 3, agg_kinds=("AVG",))[0]
+    r = eng.execute(q, max_batches=2)
+    # The likely-region test must reject the corrupt model everywhere,
+    # falling back to raw answers (Theorem 1 safety).
+    assert not np.any(np.asarray(r.snippet_answer.accepted))
+    np.testing.assert_allclose(np.asarray(r.snippet_answer.theta),
+                               np.asarray(r.snippet_answer.raw_theta))
+
+
+def test_learning_recovers_lengthscales():
+    """Fig. 7 analog: fit on answers sampled from a known model."""
+    rng = np.random.default_rng(0)
+    sch = Schema(num_lo=(0.0, 0.0), num_hi=(1.0, 1.0), cat_sizes=(), n_measures=1)
+    true = GPParams(log_ls=jnp.log(jnp.asarray([0.15, 0.6])),
+                    log_sigma2=jnp.log(2.0), mu=jnp.asarray(0.0))
+    ranges = []
+    for _ in range(80):
+        r = {}
+        for d in range(2):
+            a = rng.uniform(0, 0.8)
+            r[d] = (a, a + rng.uniform(0.02, 0.2))
+        ranges.append(r)
+    b = make_snippets(sch, agg=AVG, measure=0, num_ranges=ranges)
+    k = np.array(C.cov_matrix(b, b, true))
+    k[np.diag_indices(80)] = np.asarray(C.cov_diag(b, true))
+    chol = np.linalg.cholesky(k + 1e-10 * np.eye(80))
+    beta = 0.05
+    theta = chol @ rng.normal(size=80) + beta * rng.normal(size=80)
+    fitted, hist = learning.fit(b, jnp.asarray(theta),
+                                jnp.full((80,), beta**2), sch, steps=200, lr=0.1)
+    ls = np.exp(np.asarray(fitted.log_ls))
+    assert float(hist[-1]) < float(hist[0])  # NLL decreased
+    # short lengthscale dim identified as clearly shorter than the long one
+    assert ls[0] < ls[1]
+    assert 0.05 < ls[0] < 0.45
+    assert ls[1] > 0.3
+
+
+def test_append_adjustment_keeps_bounds_valid():
+    """App. D: after drifted appends, adjusted bounds stay valid."""
+    rng = np.random.default_rng(1)
+    rel = W.make_relation(seed=10, n_rows=10_000, n_num=2, cat_sizes=(),
+                          n_measures=1, noise=0.1)
+    eng = VerdictEngine(rel, EngineConfig(sample_rate=0.2, n_batches=4, capacity=64))
+    qs = W.make_workload(7, rel.schema, 12, agg_kinds=("AVG",), cat_pred_prob=0.0)
+    for q in qs[:8]:
+        eng.execute(q)
+    # Append 20% new rows with +0.8 shifted measure values.
+    extra = rel.take(np.arange(2_000))
+    extra.measures = extra.measures + 0.8
+    stats = estimate_append_stats(
+        np.asarray(rel.measures[:500]), np.asarray(extra.measures[:500]),
+        rel.cardinality, extra.cardinality)
+    assert stats.mu[0] == pytest.approx(0.8, abs=0.15)
+    for syn in eng.synopses.values():
+        before = syn.beta2().copy()
+        syn.apply_append(stats)
+        after = syn.beta2()
+        assert np.all(np.asarray(after) >= np.asarray(before))  # only inflate

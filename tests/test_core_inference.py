@@ -1,0 +1,189 @@
+"""Inference: Eq (11)/(12) equivalence to the joint conditional, Theorem 1,
+incremental linear algebra, padding invariance."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import covariance as C
+from repro.core import inference as I
+from repro.core.types import AVG, FREQ, GPParams, RawAnswer, Schema, make_snippets
+from repro.core.synopsis import Synopsis, inv_append_row, inv_delete_row
+import proptest as pt
+
+
+def _schema(l=2, cats=(4,)):
+    return Schema(num_lo=(0.0,) * l, num_hi=(1.0,) * l, cat_sizes=cats, n_measures=1)
+
+
+def _random_batch(rng, sch, n, agg=AVG):
+    ranges = []
+    for _ in range(n):
+        r = {}
+        for d in range(sch.n_num):
+            a = rng.uniform(0, 0.6)
+            r[d] = (a, a + rng.uniform(0.05, 0.4))
+        ranges.append(r)
+    return make_snippets(sch, agg=agg, measure=0, num_ranges=ranges)
+
+
+def test_eq11_12_matches_direct_conditional():
+    """Verdict's O(n^2) forms == conditioning the full (n+2) joint (Eq. 4/5)."""
+    rng = np.random.default_rng(3)
+    sch = _schema()
+    p = GPParams(log_ls=jnp.log(jnp.asarray([0.4, 0.7])), log_sigma2=jnp.log(1.7),
+                 mu=jnp.asarray(0.9))
+    n = 8
+    past = _random_batch(rng, sch, n)
+    new = _random_batch(rng, sch, 1)
+    theta_past = rng.normal(1.0, 0.5, n)
+    beta2_past = rng.uniform(0.01, 0.1, n) ** 2
+    theta_new = float(rng.normal(1.0, 0.5))
+    beta2_new = float(rng.uniform(0.05, 0.2) ** 2)
+
+    # --- direct: joint over (raw_1..raw_{n+1}, exact_{n+1}), condition on raws
+    kxx = np.asarray(C.cov_matrix(past, past, p))
+    kxn = np.asarray(C.cov_matrix(past, new, p))[:, 0]
+    knn = float(np.asarray(C.cov_diag(new, p))[0])
+    mu_past = np.asarray(C.prior_mean(past, p))
+    mu_new = float(np.asarray(C.prior_mean(new, p))[0])
+
+    sig = np.zeros((n + 2, n + 2))
+    sig[:n, :n] = kxx + np.diag(beta2_past)
+    sig[:n, n] = sig[n, :n] = kxn
+    sig[:n, n + 1] = sig[n + 1, :n] = kxn
+    sig[n, n] = knn + beta2_new
+    sig[n + 1, n + 1] = knn
+    sig[n, n + 1] = sig[n + 1, n] = knn
+    mu_vec = np.concatenate([mu_past, [mu_new, mu_new]])
+    obs = np.concatenate([theta_past, [theta_new]])
+    s11 = sig[: n + 1, : n + 1]
+    k_col = sig[: n + 1, n + 1]
+    mu_c = mu_new + k_col @ np.linalg.solve(s11, obs - mu_vec[: n + 1])
+    var_c = sig[n + 1, n + 1] - k_col @ np.linalg.solve(s11, k_col)
+
+    # --- Verdict path: past-only posterior + product-of-Gaussians blend
+    sigma_n = kxx + np.diag(beta2_past)
+    sinv = np.linalg.inv(sigma_n)
+    alpha = sinv @ (theta_past - mu_past)
+    th, b2, gamma2 = I.model_based_answer(
+        jnp.asarray(kxn[None, :]), jnp.asarray([knn]), jnp.asarray(sinv),
+        jnp.asarray(alpha), jnp.asarray([mu_new]),
+        jnp.asarray([theta_new]), jnp.asarray([beta2_new]),
+    )
+    assert float(th[0]) == pytest.approx(mu_c, rel=1e-8)
+    assert float(b2[0]) == pytest.approx(var_c, rel=1e-8)
+
+
+@pt.given(n_cases=15, seed=7, n=pt.ints(1, 20), b=pt.floats(0.01, 0.5))
+def test_theorem1_improved_error_never_larger(n, b):
+    rng = np.random.default_rng(int(n * 1000 + b * 100))
+    sch = _schema()
+    p = GPParams.init(sch)
+    past = _random_batch(rng, sch, n)
+    new = _random_batch(rng, sch, 3)
+    kxx = np.asarray(C.cov_matrix(past, past, p)) + np.diag(rng.uniform(0.01, 0.2, n))
+    sinv = np.linalg.inv(kxx)
+    alpha = sinv @ rng.normal(0, 1, n)
+    k = np.asarray(C.cov_matrix(new, past, p))
+    kap = np.asarray(C.cov_diag(new, p))
+    raw_beta2 = np.full(3, b**2)
+    th, b2, _ = I.model_based_answer(
+        jnp.asarray(k), jnp.asarray(kap), jnp.asarray(sinv), jnp.asarray(alpha),
+        jnp.zeros(3), jnp.zeros(3), jnp.asarray(raw_beta2))
+    assert np.all(np.asarray(b2) <= raw_beta2 + 1e-15)
+
+
+def test_exact_raw_answer_passthrough():
+    th, b2 = I.combine(jnp.asarray([5.0]), jnp.asarray([1.0]),
+                       jnp.asarray([3.0]), jnp.asarray([0.0]))
+    assert float(th[0]) == 3.0 and float(b2[0]) == 0.0
+
+
+def test_incremental_inverse_matches_full():
+    rng = np.random.default_rng(1)
+    a = rng.normal(size=(6, 6))
+    sig = a @ a.T + 6 * np.eye(6)
+    inv = jnp.asarray(np.linalg.inv(sig[:3, :3]))
+    for i in range(3, 6):
+        inv = inv_append_row(inv, jnp.asarray(sig[:i, i]), sig[i, i], jitter=0.0)
+    np.testing.assert_allclose(np.asarray(inv), np.linalg.inv(sig), rtol=1e-8)
+    # delete row 2
+    keep = [0, 1, 3, 4, 5]
+    inv_del = inv_delete_row(inv, 2)
+    np.testing.assert_allclose(
+        np.asarray(inv_del), np.linalg.inv(sig[np.ix_(keep, keep)]), rtol=1e-7)
+
+
+def test_chol_append_matches_full():
+    rng = np.random.default_rng(2)
+    a = rng.normal(size=(5, 5))
+    sig = a @ a.T + 5 * np.eye(5)
+    chol = jnp.asarray(np.linalg.cholesky(sig[:2, :2]))
+    for i in range(2, 5):
+        chol = I.chol_append_row(chol, jnp.asarray(sig[:i, i]), sig[i, i], jitter=0.0)
+    np.testing.assert_allclose(np.asarray(chol), np.linalg.cholesky(sig), rtol=1e-8)
+
+
+def test_synopsis_padding_invariance():
+    """Same improved answers whatever the capacity padding."""
+    rng = np.random.default_rng(5)
+    sch = _schema()
+    past = _random_batch(rng, sch, 10)
+    theta = rng.normal(1, 0.3, 10)
+    beta2 = rng.uniform(0.01, 0.05, 10)
+    new = _random_batch(rng, sch, 4)
+    raw = RawAnswer(jnp.asarray(rng.normal(1, 0.3, 4)), jnp.asarray(np.full(4, 0.02)))
+    outs = []
+    for cap in (16, 64, 256):
+        syn = Synopsis(sch, capacity=cap)
+        syn.add(past, theta, beta2)
+        imp = syn.improve(new, raw)
+        outs.append((np.asarray(imp.theta), np.asarray(imp.beta2)))
+    for t, b in outs[1:]:
+        np.testing.assert_allclose(t, outs[0][0], rtol=1e-7)
+        np.testing.assert_allclose(b, outs[0][1], rtol=1e-7)
+
+
+def test_synopsis_lru_eviction_and_duplicates():
+    rng = np.random.default_rng(6)
+    sch = _schema()
+    syn = Synopsis(sch, capacity=8)
+    b1 = _random_batch(rng, sch, 8)
+    syn.add(b1, rng.normal(1, 0.1, 8), np.full(8, 0.02))
+    assert syn.n == 8
+    # duplicate insert: refreshes stamp, keeps better answer
+    syn.add(b1[0], np.asarray([2.0]), np.asarray([0.001]))
+    assert syn.n == 8
+    assert syn._theta[0] == pytest.approx(2.0)
+    # new snippet evicts the LRU one (row 1 now oldest)
+    b2 = _random_batch(rng, sch, 1)
+    syn.add(b2, np.asarray([1.5]), np.asarray([0.02]))
+    assert syn.n == 8
+    assert len(syn._order) == 8
+
+
+def test_synopsis_incremental_matches_rebuild():
+    rng = np.random.default_rng(7)
+    sch = _schema()
+    syn = Synopsis(sch, capacity=32)
+    for i in range(3):
+        b = _random_batch(rng, sch, 4)
+        syn.add(b, rng.normal(1, 0.2, 4), rng.uniform(0.01, 0.05, 4))
+    inv_inc = np.asarray(syn._sigma_inv).copy()
+    syn.rebuild()
+    np.testing.assert_allclose(inv_inc, np.asarray(syn._sigma_inv), rtol=1e-6)
+
+
+def test_synopsis_state_roundtrip():
+    rng = np.random.default_rng(8)
+    sch = _schema()
+    syn = Synopsis(sch, capacity=16)
+    syn.add(_random_batch(rng, sch, 6), rng.normal(1, 0.2, 6), np.full(6, 0.02))
+    state = syn.state_dict()
+    syn2 = Synopsis(sch, capacity=16)
+    syn2.load_state_dict(state)
+    new = _random_batch(rng, sch, 2)
+    raw = RawAnswer(jnp.asarray([1.0, 1.1]), jnp.asarray([0.02, 0.02]))
+    i1 = syn.improve(new, raw)
+    i2 = syn2.improve(new, raw)
+    np.testing.assert_allclose(np.asarray(i1.theta), np.asarray(i2.theta), rtol=1e-7)

@@ -1,0 +1,163 @@
+"""Per-kernel allclose vs pure-jnp oracles, with shape/dtype sweeps
+(interpret mode executes the kernel bodies on CPU)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import covariance as C
+from repro.core.types import AVG, FREQ, GPParams, Schema, make_snippets
+from repro.kernels.se_covariance.kernel import se_cov_pallas
+from repro.kernels.se_covariance.ops import se_cov_matrix
+from repro.kernels.se_covariance.ref import se_cov_matrix_ref
+from repro.kernels.range_mask_agg.ops import eval_partials_kernel, range_mask_agg
+from repro.kernels.range_mask_agg.ref import range_mask_agg_ref
+from repro.kernels.gp_batch_infer.ops import gp_batch_infer
+from repro.kernels.gp_batch_infer.ref import gp_batch_infer_ref
+
+
+def _ranges(rng, n, l, dtype=np.float32):
+    lo = rng.uniform(0, 0.6, (n, l)).astype(dtype)
+    hi = (lo + rng.uniform(0.05, 0.4, (n, l))).astype(dtype)
+    return lo, hi
+
+
+# ------------------------------------------------------------- se_covariance
+@pytest.mark.parametrize("ni,nj,l", [(8, 8, 1), (100, 30, 3), (128, 128, 2),
+                                     (257, 64, 5), (1, 300, 4)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_se_covariance_matches_ref(ni, nj, l, dtype):
+    rng = np.random.default_rng(ni * 1000 + nj + l)
+    lo_i, hi_i = _ranges(rng, ni, l, dtype)
+    lo_j, hi_j = _ranges(rng, nj, l, dtype)
+    ls = rng.uniform(0.2, 1.2, (l,)).astype(dtype)
+    norm_i = rng.uniform(0.5, 2.0, (ni,)).astype(dtype)
+    norm_j = rng.uniform(0.5, 2.0, (nj,)).astype(dtype)
+    sigma2 = 1.7
+    got = se_cov_matrix(jnp.asarray(lo_i), jnp.asarray(hi_i), jnp.asarray(lo_j),
+                        jnp.asarray(hi_j), jnp.asarray(ls), sigma2,
+                        jnp.asarray(norm_i), jnp.asarray(norm_j),
+                        tile_i=64, tile_j=64)
+    want = se_cov_matrix_ref(
+        jnp.asarray(lo_i, jnp.float64), jnp.asarray(hi_i, jnp.float64),
+        jnp.asarray(lo_j, jnp.float64), jnp.asarray(hi_j, jnp.float64),
+        jnp.asarray(ls, jnp.float64), sigma2,
+        jnp.asarray(norm_i, jnp.float64), jnp.asarray(norm_j, jnp.float64))
+    rtol = 2e-5 if dtype == np.float32 else 1e-10
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol,
+                               atol=1e-7)
+
+
+def test_se_covariance_matches_core_cov_matrix():
+    """Kernel path == repro.core.covariance.cov_matrix (AVG normalization)."""
+    sch = Schema(num_lo=(0.0, 0.0), num_hi=(1.0, 1.0), cat_sizes=(), n_measures=1)
+    p = GPParams(log_ls=jnp.log(jnp.asarray([0.4, 0.8])),
+                 log_sigma2=jnp.log(1.3), mu=jnp.asarray(0.0))
+    rng = np.random.default_rng(0)
+    ranges = [{0: (a, a + w), 1: (b, b + v)} for a, w, b, v in
+              rng.uniform(0.05, 0.4, (20, 4))]
+    b = make_snippets(sch, agg=AVG, measure=0, num_ranges=ranges)
+    want = np.asarray(C.cov_matrix(b, b, p))
+    lo, hi, w = C.widened(b.lo, b.hi)
+    norm = jnp.prod(w, axis=-1)
+    got = se_cov_matrix(lo, hi, lo, hi, p.ls, float(p.sigma2), norm, norm,
+                        tile_i=32, tile_j=32)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-5)
+
+
+# ------------------------------------------------------------ range_mask_agg
+@pytest.mark.parametrize("t,q,l,m", [(64, 16, 2, 1), (1000, 37, 3, 2),
+                                     (4096, 128, 1, 1), (513, 200, 4, 3)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_range_mask_agg_matches_ref(t, q, l, m, dtype):
+    rng = np.random.default_rng(t + q)
+    x = rng.uniform(0, 1, (t, l)).astype(dtype)
+    payload = rng.normal(0, 1, (t, 2 * m + 1)).astype(dtype)
+    lo, hi = _ranges(rng, q, l, dtype)
+    em = (rng.uniform(0, 1, (t, q)) > 0.3).astype(dtype)
+    got = range_mask_agg(jnp.asarray(x), jnp.asarray(payload), jnp.asarray(lo),
+                         jnp.asarray(hi), jnp.asarray(em),
+                         tile_t=256, tile_q=64)
+    want = range_mask_agg_ref(jnp.asarray(x, jnp.float64),
+                              jnp.asarray(payload, jnp.float64),
+                              jnp.asarray(lo, jnp.float64),
+                              jnp.asarray(hi, jnp.float64),
+                              jnp.asarray(em, jnp.float64))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_eval_partials_kernel_matches_executor():
+    """Kernel Partials == pure-jnp executor Partials on a real workload."""
+    from repro.aqp import workload as W
+    from repro.aqp.executor import eval_partials
+    from repro.aqp.queries import decompose
+
+    rel = W.make_relation(seed=3, n_rows=5000, n_num=2, cat_sizes=(5,),
+                          n_measures=2)
+    qs = W.make_workload(4, rel.schema, 8)
+    plans = [decompose(rel.schema, q) for q in qs]
+    from repro.core.types import SnippetBatch
+
+    snips = SnippetBatch.concat([p.snippets for p in plans])
+    want = eval_partials(rel.num_normalized, rel.cat, rel.measures, snips)
+    got = eval_partials_kernel(rel.num_normalized, rel.cat, rel.measures, snips)
+    np.testing.assert_allclose(np.asarray(got.count), np.asarray(want.count))
+    np.testing.assert_allclose(np.asarray(got.sums), np.asarray(want.sums),
+                               rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(got.sumsq), np.asarray(want.sumsq),
+                               rtol=2e-4)
+
+
+# ------------------------------------------------------------ gp_batch_infer
+@pytest.mark.parametrize("q,c", [(1, 16), (64, 128), (100, 300), (256, 1000)])
+def test_gp_batch_infer_matches_ref(q, c):
+    rng = np.random.default_rng(q + c)
+    a = rng.normal(size=(c, c)).astype(np.float32)
+    sinv = (a @ a.T / c + np.eye(c)).astype(np.float32)
+    k = rng.normal(0, 0.1, (q, c)).astype(np.float32)
+    alpha = rng.normal(0, 1, (c,)).astype(np.float32)
+    kappa2 = (np.abs(k @ sinv @ k.T).diagonal() + rng.uniform(0.05, 0.5, q)).astype(np.float32)
+    mu = rng.normal(0, 1, (q,)).astype(np.float32)
+    rawt = rng.normal(0, 1, (q,)).astype(np.float32)
+    rawb = rng.uniform(0.0, 0.3, (q,)).astype(np.float32)
+    rawb[0] = 0.0  # exercise the exact-answer passthrough
+    got = gp_batch_infer(*map(jnp.asarray, (k, sinv, alpha, kappa2, mu, rawt, rawb)),
+                         tile_q=64, tile_c=128)
+    want = gp_batch_infer_ref(*map(lambda v: jnp.asarray(v, jnp.float64),
+                                   (k, sinv, alpha, kappa2, mu, rawt, rawb)))
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=5e-3,
+                                   atol=5e-5)
+
+
+def test_gp_batch_infer_theorem1():
+    rng = np.random.default_rng(9)
+    c, q = 64, 32
+    a = rng.normal(size=(c, c)).astype(np.float32)
+    sinv = (a @ a.T / c + np.eye(c)).astype(np.float32)
+    k = rng.normal(0, 0.05, (q, c)).astype(np.float32)
+    kappa2 = np.abs(k @ sinv @ k.T).diagonal() + 0.3
+    rawb = rng.uniform(0.01, 0.3, (q,)).astype(np.float32)
+    _, beta2, _ = gp_batch_infer(
+        jnp.asarray(k), jnp.asarray(sinv), jnp.zeros((c,), jnp.float32),
+        jnp.asarray(kappa2, jnp.float32), jnp.zeros((q,), jnp.float32),
+        jnp.zeros((q,), jnp.float32), jnp.asarray(rawb))
+    assert np.all(np.asarray(beta2) <= rawb + 1e-7)
+
+
+def test_engine_with_kernel_scan_path():
+    """VerdictEngine(use_kernels=True) reproduces the jnp engine's answers."""
+    from repro.aqp import workload as W
+    from repro.core.engine import EngineConfig, VerdictEngine
+
+    rel = W.make_relation(seed=5, n_rows=8000, n_num=2, cat_sizes=(4,), n_measures=1)
+    qs = W.make_workload(6, rel.schema, 4, agg_kinds=("AVG", "COUNT"))
+    r_jnp = VerdictEngine(rel, EngineConfig(sample_rate=0.2, n_batches=3, seed=1))
+    r_ker = VerdictEngine(rel, EngineConfig(sample_rate=0.2, n_batches=3, seed=1,
+                                            use_kernels=True))
+    for q in qs:
+        a = r_jnp.execute(q, max_batches=3)
+        b = r_ker.execute(q, max_batches=3)
+        for ca, cb in zip(a.cells, b.cells):
+            assert abs(ca["estimate"] - cb["estimate"]) <= 1e-3 * max(1.0, abs(ca["estimate"]))

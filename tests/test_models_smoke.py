@@ -1,0 +1,156 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+asserting output shapes and no NaNs; plus a greedy decode round trip."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import params as PM
+from repro.models import transformer as T
+from repro.models.common import ShardCtx
+from repro.training.optimizer import adamw
+from repro.training.train_loop import make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab, jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.cross_attn:
+        batch["ctx"] = jax.random.normal(
+            k2, (B, cfg.cross_attn.n_ctx, cfg.d_model), jnp.float32)
+    if cfg.enc_dec:
+        batch["enc"] = jax.random.normal(k2, (B, S, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.names())
+def test_forward_and_train_step(arch):
+    cfg = configs.get_smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = PM.init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    ctx = batch.get("ctx")
+    if cfg.enc_dec:
+        ctx = T.encode(cfg, params, batch["enc"])
+    logits, _ = T.forward(cfg, params, batch["tokens"], ctx_tokens=ctx)
+    assert logits.shape == (B, S, PM.vocab_padded(cfg))
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    step = jax.jit(make_train_step(cfg, adamw(), accum=2))
+    mb = jax.tree.map(lambda x: jnp.stack([x, x]), batch)  # (accum=2, B, ...)
+    opt_state = adamw().init(params)
+    new_params, opt_state, metrics = step(params, opt_state, mb, 1e-3)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["loss"]) > 0
+    # parameters actually moved
+    delta = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                           - b.astype(jnp.float32)))),
+        params, new_params))
+    assert max(delta) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma2-2b", "rwkv6-3b",
+                                  "hymba-1.5b", "seamless-m4t-medium",
+                                  "llama-3.2-vision-11b", "arctic-480b"])
+def test_decode_matches_prefill(arch):
+    """Greedy decode equals teacher-forced forward argmax (cache correctness)."""
+    cfg = configs.get_smoke(arch)
+    key = jax.random.PRNGKey(1)
+    params = PM.init_params(cfg, key)
+    batch = _batch(cfg, key)
+    tokens = batch["tokens"]
+    ctx = batch.get("ctx")
+    enc = batch.get("enc")
+
+    from repro.serving.engine import make_prefill_step, make_serve_step
+
+    max_len = S + cfg.meta_tokens + 4
+    n_ctx = (ctx.shape[1] if ctx is not None else (S if enc is not None else 0))
+    prefill = make_prefill_step(cfg, max_len=max_len, n_ctx=n_ctx)
+    serve = make_serve_step(cfg)
+
+    # Teacher-forced logits over the full sequence:
+    ctx_full = T.encode(cfg, params, enc) if cfg.enc_dec else ctx
+    full_logits, _ = T.forward(cfg, params, tokens, ctx_tokens=ctx_full)
+
+    # Prefill on the first S-1 tokens, then decode one step:
+    last_logit, caches = prefill(params, tokens[:, : S - 1], ctx_tokens=ctx,
+                                 enc_embeds=enc)
+    np.testing.assert_allclose(
+        np.asarray(last_logit), np.asarray(full_logits[:, S - 2]),
+        rtol=2e-3, atol=2e-3)
+
+    pos = jnp.asarray(S - 1 + cfg.meta_tokens, jnp.int32)
+    nxt, caches = serve(params, caches, tokens[:, S - 1 : S], pos)
+    want = np.argmax(np.asarray(full_logits[:, S - 1]), axis=-1)
+    np.testing.assert_array_equal(np.asarray(nxt)[:, 0], want)
+
+
+def test_rwkv_chunked_matches_sequential():
+    cfg = configs.get_smoke("rwkv6-3b")
+    from repro.models import rwkv as R
+
+    key = jax.random.PRNGKey(2)
+    params = PM.init_params(cfg, key)
+    p = params["groups"][0]["sub0"]["ssm"]
+    lp = jax.tree.map(lambda x: x[0], p)  # first layer of the stacked group
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 37, cfg.d_model), jnp.float32)
+    got, _ = R.rwkv6_mix(cfg, lp, x)
+    want = R.rwkv6_mix_ref(cfg, lp, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_mamba_chunked_matches_sequential():
+    cfg = configs.get_smoke("hymba-1.5b")
+    from repro.models import mamba as M
+
+    key = jax.random.PRNGKey(4)
+    params = PM.init_params(cfg, key)
+    lp = params["groups"][1]["sub0"]["ssm"]
+    lp = jax.tree.map(lambda x: x[0], lp)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 23, cfg.d_model), jnp.float32)
+    got, _ = M.mamba_mix(cfg, lp, x)
+    want = M.mamba_mix_ref(cfg, lp, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_param_counts_match_formula():
+    """params.count_params ~ ArchConfig.n_params (within padding slack)."""
+    for arch in configs.names():
+        cfg = configs.get(arch)
+        counted = PM.count_params(cfg)
+        formula = cfg.n_params
+        assert abs(counted - formula) / formula < 0.06, (
+            arch, counted, formula)
+
+
+def test_full_config_dimensions():
+    """The exact assigned dimensions are preserved in full configs."""
+    spec = {
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "llama4-maverick-400b-a17b": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+        "starcoder2-3b": (30, 3072, 24, 2, 12288, 49152),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65536),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+    }
+    for arch, (nl, d, h, kv, ff, v) in spec.items():
+        cfg = configs.get(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                cfg.d_ff, cfg.vocab) == (nl, d, h, kv, ff, v), arch
+        # layer plan covers exactly n_layers (decoder side)
+        total = sum(len(unit) * rep for unit, rep in cfg.layer_plan())
+        assert total == cfg.n_layers, arch
