@@ -1,0 +1,93 @@
+"""Single-query vs batched-executor throughput on a shared workload.
+
+Measures the tentpole claim of the batched execution layer: serving N
+queries per scan through ``BatchExecutor`` turns N x B ``eval_partials``
+calls into B fused MXU passes, so queries/sec scales with the workload
+instead of with Python dispatch overhead.
+
+    PYTHONPATH=src python benchmarks/batch_bench.py [--queries 50] [--dry-run]
+
+Reports queries/sec and scanned tuples/sec for both paths, the fused
+speedup, and the cross-query dedup ratio.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.aqp import workload as W
+from repro.aqp.batch import BatchExecutor
+from repro.core.engine import EngineConfig, VerdictEngine
+
+
+def bench(n_queries=50, n_rows=20_000, n_batches=6, sample_rate=0.15,
+          repeat_frac=0.4, seed=0):
+    """Returns [(metric_name, value)] rows (benchmarks/run.py convention).
+
+    ``repeat_frac``: fraction of the workload that re-issues earlier queries
+    (dashboard refreshes) — the cross-query dedup's natural food.
+    """
+    rel = W.make_relation(seed=seed, n_rows=n_rows, n_num=2, cat_sizes=(4,),
+                          n_measures=1, lengthscale=0.4, noise=0.2)
+    n_fresh = max(int(n_queries * (1.0 - repeat_frac)), 1)
+    qs = W.make_workload(1, rel.schema, n_fresh, agg_kinds=("AVG", "COUNT", "SUM"),
+                         cat_pred_prob=0.3)
+    qs = (qs * (n_queries // n_fresh + 1))[:n_queries]
+    cfg = dict(sample_rate=sample_rate, n_batches=n_batches, capacity=512,
+               seed=seed)
+
+    # Warm both engines' jitted paths on a throwaway query (compile time is a
+    # one-off cost; the claim under test is steady-state throughput).
+    warm_q = W.make_workload(2, rel.schema, 1)[0]
+    seq = VerdictEngine(rel, EngineConfig(**cfg))
+    bat = VerdictEngine(rel, EngineConfig(**cfg))
+    seq.execute(warm_q)
+    BatchExecutor(bat).execute_many([warm_q])
+
+    t0 = time.perf_counter()
+    r_seq = [seq.execute(q) for q in qs]
+    t_seq = time.perf_counter() - t0
+
+    bx = BatchExecutor(bat)
+    t0 = time.perf_counter()
+    r_bat = bx.execute_many(qs)
+    t_bat = time.perf_counter() - t0
+
+    tuples_seq = sum(r.tuples_scanned for r in r_seq)
+    tuples_bat = sum(r.tuples_scanned for r in r_bat)
+    return [
+        ("batch/seq_queries_per_sec", n_queries / t_seq),
+        ("batch/fused_queries_per_sec", n_queries / t_bat),
+        ("batch/speedup_queries_per_sec", t_seq / t_bat),
+        ("batch/seq_tuples_per_sec", tuples_seq / t_seq),
+        ("batch/fused_tuples_per_sec", tuples_bat / t_bat),
+        ("batch/dedup_ratio", bx.stats.dedup_ratio),
+        ("batch/eval_calls_fused", float(bx.stats.eval_calls)),
+        ("batch/eval_calls_seq", float(sum(r.batches_used for r in r_seq))),
+    ]
+
+
+def run():
+    """Entry point for ``benchmarks.run`` suite registration."""
+    return bench()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=50)
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--batches", type=int, default=6)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny sizes, CI smoke: checks the path runs end-to-end")
+    args = ap.parse_args()
+    if args.dry_run:
+        rows = bench(n_queries=6, n_rows=2_000, n_batches=2)
+    else:
+        rows = bench(n_queries=args.queries, n_rows=args.rows,
+                     n_batches=args.batches)
+    for name, val in rows:
+        print(f"{name},{val:.4g}")
+
+
+if __name__ == "__main__":
+    main()

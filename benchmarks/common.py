@@ -28,8 +28,9 @@ def train_engines(relation, train_queries, *, sample_rate=0.15, n_batches=8,
     nolearn = VerdictEngine(relation, EngineConfig(
         sample_rate=sample_rate, n_batches=n_batches, capacity=capacity,
         seed=seed, learning=False))
-    for q in train_queries:
-        verdict.execute(q)
+    # Fused training pass: one scan serves the whole training workload
+    # (identical answers to the query-at-a-time loop, see repro.aqp.batch).
+    verdict.execute_many(train_queries)
     # learn_sigma: the analytic sigma^2 (App. F.3) underestimates the prior
     # variance (range-averaged answers shrink it), which over-tightens the
     # improved bounds; NLL-learning sigma^2 jointly (exact gradients) fixes

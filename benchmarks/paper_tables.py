@@ -89,8 +89,7 @@ def table5_overhead():
                                               capacity=max(n_past, 64)))
         qs = W.make_workload(4, rel.schema, n_past // 5, agg_kinds=("AVG",),
                              cat_pred_prob=0.0)
-        for q in qs:
-            eng.execute(q)
+        eng.execute_many(qs)
         q = W.make_workload(5, rel.schema, 1, agg_kinds=("AVG",),
                             cat_pred_prob=0.0)[0]
         eng.execute(q, max_batches=1)  # warm the jitted path
@@ -252,8 +251,7 @@ def fig12_data_append():
                                  seed=v.config.seed)
         viols = []
         from benchmarks.common import exact_cells
-        for q in sq:
-            r = v.execute(q, max_batches=2)
+        for q, r in zip(sq, v.execute_many(sq, max_batches=2)):
             exact = exact_cells(merged, v, q)
             for c in r.cells:
                 ex = exact[(c["group"], c["agg"])]

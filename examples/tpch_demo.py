@@ -21,9 +21,8 @@ def main():
                                               capacity=512, seed=0))
     nolearn = VerdictEngine(rel, EngineConfig(sample_rate=0.1, n_batches=8,
                                               seed=0, learning=False))
-    print("training on 30 queries (first half of the trace)...")
-    for q in train_q:
-        verdict.execute(q)
+    print("training on 30 queries (first half of the trace, one fused scan)...")
+    verdict.execute_many(train_q)
     verdict.refit(steps=60)
 
     print(f"\n{'#':>3} {'kind':>6} {'cells':>5} {'NoLearn bound%':>15} "

@@ -1,2 +1,3 @@
 from repro.aqp.relation import Relation
 from repro.aqp.queries import AggQuery, AggSpec, CatEq, CatIn, NumEq, NumRange
+from repro.aqp.batch import BatchExecutor, BatchStats

@@ -33,6 +33,7 @@ from repro.core.types import (
     RawAnswer,
     Schema,
     SnippetBatch,
+    pad_snippets,
 )
 from repro.utils.stats import confidence_multiplier
 
@@ -175,23 +176,29 @@ class VerdictEngine:
         if not groups:
             return QueryResult([], 0, 0, True, plan=None)
         plan = Q.decompose(self.schema, q, groups, n_max=self.config.n_max)
-        acc = Partials.zeros(plan.snippets.n)
+        # Scan over a tile-padded batch: shape-stable across plans (one
+        # compiled program per size bucket) and bitwise-reproducible per row,
+        # so the fused BatchExecutor path can match this one exactly.
+        padded = pad_snippets(plan.snippets)
+        n = plan.snippets.n
+        acc = Partials.zeros(padded.n)
         used = 0
         improved = None
         raw = None
         for rows in self.batches.batch_rows[:max_batches]:
             block = self.batches.relation.take(rows)
             acc = acc + self._eval_fn(
-                block.num_normalized, block.cat, block.measures, plan.snippets
+                block.num_normalized, block.cat, block.measures, padded
             )
             used += 1
-            theta, beta2, _ = estimates_from_partials(acc, plan.snippets)
-            raw = RawAnswer(theta, beta2)
+            theta, beta2, _ = estimates_from_partials(acc, padded)
+            raw = RawAnswer(theta[:n], beta2[:n])
             if self.config.learning:
                 improved = self._improve(plan.snippets, raw)
             else:
                 improved = ImprovedAnswer(
-                    theta, beta2, theta, beta2, jnp.zeros((plan.snippets.n,), bool)
+                    raw.theta, raw.beta2, raw.theta, raw.beta2,
+                    jnp.zeros((n,), bool),
                 )
             if target_rel_error is not None:
                 cells = Q.assemble_results(
@@ -216,6 +223,27 @@ class VerdictEngine:
 
     def _execute_raw_only(self, q, reason, max_batches):
         """Unsupported queries: raw AQP answers, no learning (paper §2.2)."""
+        probe = self.raw_only_probe(q)
+        groups = self._discover_groups(probe)
+        plan = Q.decompose(self.schema, probe, groups, n_max=self.config.n_max)
+        padded = pad_snippets(plan.snippets)
+        acc = Partials.zeros(padded.n)
+        used = 0
+        for rows in self.batches.batch_rows[:max_batches]:
+            block = self.batches.relation.take(rows)
+            acc = acc + eval_partials(
+                block.num_normalized, block.cat, block.measures, padded
+            )
+            used += 1
+        theta, beta2, _ = estimates_from_partials(acc, padded)
+        n = plan.snippets.n
+        cells = Q.assemble_results(
+            plan, theta[:n], beta2[:n], self.batches.source_cardinality
+        )
+        return QueryResult(cells, used, self._tuples(used), False, reason, plan=plan)
+
+    def raw_only_probe(self, q: Q.AggQuery) -> Q.AggQuery:
+        """The supported-subset probe the raw-only path evaluates (§2.2)."""
         supported_aggs = tuple(
             a for a in q.aggs if a.kind in Q.SUPPORTED_KINDS
         ) or (Q.AggSpec("COUNT", None),)
@@ -223,17 +251,25 @@ class VerdictEngine:
             p for p in q.predicates
             if not isinstance(p, (Q.Disjunction, Q.TextLike))
         )
-        probe = Q.AggQuery(aggs=supported_aggs, predicates=clean_preds, groupby=q.groupby)
-        groups = self._discover_groups(probe)
-        plan = Q.decompose(self.schema, probe, groups, n_max=self.config.n_max)
-        acc = Partials.zeros(plan.snippets.n)
-        used = 0
-        for rows in self.batches.batch_rows[:max_batches]:
-            block = self.batches.relation.take(rows)
-            acc = acc + eval_partials(
-                block.num_normalized, block.cat, block.measures, plan.snippets
-            )
-            used += 1
-        theta, beta2, _ = estimates_from_partials(acc, plan.snippets)
-        cells = Q.assemble_results(plan, theta, beta2, self.batches.source_cardinality)
-        return QueryResult(cells, used, self._tuples(used), False, reason, plan=plan)
+        return Q.AggQuery(aggs=supported_aggs, predicates=clean_preds,
+                          groupby=q.groupby)
+
+    # -------------------------------------------------------------- batched
+    def execute_many(
+        self,
+        queries,
+        target_rel_error: Optional[float] = None,
+        max_batches: Optional[int] = None,
+        mesh=None,
+    ) -> List[QueryResult]:
+        """Execute a workload through the fused ``BatchExecutor`` path.
+
+        Every sample batch is scanned exactly once for the whole workload
+        (identical snippets deduped across queries); answers match ``execute``
+        run query-by-query bit for bit. See ``repro.aqp.batch``.
+        """
+        from repro.aqp.batch import BatchExecutor
+
+        return BatchExecutor(self, mesh=mesh).execute_many(
+            queries, target_rel_error=target_rel_error, max_batches=max_batches
+        )

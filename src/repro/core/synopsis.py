@@ -26,6 +26,8 @@ from repro.core.types import (
     RawAnswer,
     Schema,
     SnippetBatch,
+    pad_snippets,
+    snippet_key,
 )
 
 REFACTOR_EVERY = 128  # full O(n^3) rebuild cadence (numerical hygiene)
@@ -53,6 +55,54 @@ def inv_delete_row(ainv, r):
     b = ainv[keep, r]
     d = ainv[r, r]
     return a - jnp.outer(b, b) / d
+
+
+def inv_append_block(ainv, cols, block, jitter=JITTER):
+    """O(m^2 k + k^3) inverse update appending k rows/cols at once.
+
+    Blocked matrix-inversion lemma (the rank-k generalization of
+    ``inv_append_row``): given A^{-1} for the current (m, m) covariance, the
+    inverse of [[A, Bᵀ], [B, D]] is assembled from the Schur complement
+    S = D - B A^{-1} Bᵀ.
+
+    cols:  (k, m) covariance of the new rows against the existing ones (B).
+    block: (k, k) covariance among the new rows, noise included on the
+           diagonal (D).
+    """
+    k = block.shape[0]
+    m = ainv.shape[0]
+    u = cols @ ainv  # (k, m) = B A^{-1}
+    s = block - u @ cols.T  # Schur complement
+    s = 0.5 * (s + s.T)
+    # Clamp to PSD via eigenvalues — the rank-k generalization of
+    # inv_append_row's max(s, jitter): near-duplicate snippets can make S
+    # numerically indefinite, and jnp's Cholesky would silently emit NaNs.
+    w, v = jnp.linalg.eigh(s)
+    w = jnp.maximum(w + jitter, jitter)
+    sinv = (v / w) @ v.T
+    ust = u.T @ sinv  # (m, k) = A^{-1} Bᵀ S^{-1}
+    out = jnp.zeros((m + k, m + k), ainv.dtype)
+    out = out.at[:m, :m].set(ainv + ust @ u)
+    out = out.at[:m, m:].set(-ust)
+    out = out.at[m:, :m].set(-ust.T)
+    out = out.at[m:, m:].set(sinv)
+    return out
+
+
+def inv_delete_block(ainv, positions):
+    """O(m^2 k + k^3) inverse update deleting k rows/cols at once.
+
+    Partitioned-inverse identity: with the inverse partitioned over
+    keep/delete index sets as [[P, Q], [Qᵀ, R]], the inverse of the kept
+    block of the original matrix is P - Q R^{-1} Qᵀ.
+    """
+    n = ainv.shape[0]
+    pos = np.asarray(positions, np.int64)
+    keep = np.setdiff1d(np.arange(n), pos)
+    a = ainv[np.ix_(keep, keep)]
+    b = ainv[np.ix_(keep, pos)]
+    d = ainv[np.ix_(pos, pos)]
+    return a - b @ jnp.linalg.solve(d, b.T)
 
 
 @jax.jit
@@ -134,14 +184,21 @@ class Synopsis:
 
     @staticmethod
     def _key(lo, hi, cat, agg, measure):
-        return hash(
-            (lo.tobytes(), hi.tobytes(), cat.tobytes(), int(agg), int(measure))
-        )
+        return snippet_key(lo, hi, cat, agg, measure)
 
     # ----------------------------------------------------------------- insert
     def add(self, snippets: SnippetBatch, theta, beta2):
         """Insert raw answers; duplicates refresh LRU stamps and keep the more
-        accurate answer. O(n^2) per genuinely-new snippet."""
+        accurate answer.
+
+        Vectorized ingest: covariance columns for every genuinely-new row are
+        built in one ``cov_matrix_jit`` call and applied with one blocked
+        rank-k inverse update (``inv_append_block``); capacity evictions for
+        the whole batch are applied with one blocked delete. Dedup/LRU
+        semantics match the historical per-snippet path, except that eviction
+        victims are chosen after the whole incoming batch has refreshed its
+        duplicate stamps.
+        """
         lo = np.asarray(snippets.lo)
         hi = np.asarray(snippets.hi)
         cat = np.asarray(snippets.cat)
@@ -149,6 +206,7 @@ class Synopsis:
         mea = np.asarray(snippets.measure)
         theta = np.asarray(theta)
         beta2 = np.asarray(beta2)
+        pending: dict = {}  # key -> [incoming index of best beta2, LRU stamp]
         for i in range(lo.shape[0]):
             if not (np.isfinite(theta[i]) and np.isfinite(beta2[i])):
                 continue
@@ -161,79 +219,121 @@ class Synopsis:
                     self._theta[r] = theta[i]
                     self._replace_beta(r, beta2[i])
                 continue
-            if self.n < self.capacity:
-                r = self.n
-                self.n += 1
+            entry = pending.get(key)
+            if entry is None:
+                pending[key] = [i, self._clock]
             else:
-                r = int(np.argmin(self._stamp[: self.n]))  # LRU eviction
-                old_key = self._key(
-                    self._lo[r], self._hi[r], self._cat[r], self._agg[r], self._measure[r]
-                )
-                self._keys.pop(old_key, None)
-                self._delete_from_model(r)
-            self._lo[r] = lo[i]
-            self._hi[r] = hi[i]
-            self._cat[r] = cat[i]
-            self._agg[r] = agg[i]
-            self._measure[r] = mea[i]
-            self._theta[r] = theta[i]
-            self._beta2[r] = beta2[i]
-            self._stamp[r] = self._clock
-            self._keys[key] = r
-            self._insert_into_model(r)
+                entry[1] = self._clock
+                if beta2[i] < beta2[entry[0]]:
+                    entry[0] = i
+        # If one call brings more new snippets than the whole store holds,
+        # only the most recently used ``capacity`` survive (LRU: a snippet
+        # re-occurring late in the batch carries its refreshed stamp).
+        new = list(pending.items())
+        if len(new) > self.capacity:
+            new.sort(key=lambda kv: kv[1][1])
+            new = new[-self.capacity :]
+        if new:
+            n_evict = max(0, self.n + len(new) - self.capacity)
+            free: list = []
+            if n_evict:
+                victims = np.argsort(self._stamp[: self.n], kind="stable")[:n_evict]
+                for r in victims:
+                    old_key = self._key(
+                        self._lo[r], self._hi[r], self._cat[r],
+                        self._agg[r], self._measure[r],
+                    )
+                    self._keys.pop(old_key, None)
+                self._delete_block_from_model(victims)
+                free = [int(r) for r in victims]
+            grow = len(new) - len(free)
+            slots = list(range(self.n, self.n + grow)) + free
+            self.n += grow
+            for (key, (i, stamp)), r in zip(new, slots):
+                self._lo[r] = lo[i]
+                self._hi[r] = hi[i]
+                self._cat[r] = cat[i]
+                self._agg[r] = agg[i]
+                self._measure[r] = mea[i]
+                self._theta[r] = theta[i]
+                self._beta2[r] = beta2[i]
+                self._stamp[r] = stamp
+                self._keys[key] = r
+            self._insert_block_into_model(slots)
         self._refresh_alpha()
         self._device_state = None
 
     def _replace_beta(self, r, new_beta2):
         """Diagonal-only change: redo row r in the model (delete+insert)."""
-        self._delete_from_model(r, already_removed_row=False)
+        self._delete_from_model(r)
         self._beta2[r] = new_beta2
-        self._insert_into_model(r)
+        self._insert_block_into_model([r])
 
     # ------------------------------------------------------ incremental model
-    def _cov_against_active(self, r, rows):
-        one = self._row_batch(np.array([r]))
-        if len(rows) == 0:
-            col = np.zeros((0,))
-        else:
-            others = self._row_batch(np.asarray(rows))
-            col = np.asarray(covariance.cov_matrix_jit(one, others, self.params))[0]
-        diag = float(np.asarray(covariance.cov_diag_jit(one, self.params))[0]) + float(
-            self._beta2[r]
-        )
-        return col, diag
+    def _cov_blocks(self, rows, prev):
+        """Covariance of ``rows`` against ``prev`` and among themselves.
 
-    def _insert_into_model(self, r):
-        """Row r was just written at position n-1 OR replaces an evicted slot.
+        Inputs are padded to shape buckets so ``cov_matrix_jit`` compiles a
+        bounded number of programs instead of one per synopsis fill level.
+        """
+        k = len(rows)
+        batch = self._row_batch(np.asarray(rows, np.int64))
+        padded = pad_snippets(batch, 8)
+        if len(prev):
+            prev_b = pad_snippets(self._row_batch(np.asarray(prev, np.int64)), 64)
+            cols = np.asarray(
+                covariance.cov_matrix_jit(padded, prev_b, self.params)
+            )[:k, : len(prev)]
+        else:
+            cols = np.zeros((k, 0))
+        block = np.array(
+            covariance.cov_matrix_jit(padded, padded, self.params)
+        )[:k, :k]
+        block[np.diag_indices(k)] = (
+            np.asarray(covariance.cov_diag_jit(padded, self.params))[:k]
+            + self._beta2[np.asarray(rows, np.int64)]
+        )
+        return cols, block
+
+    def _insert_block_into_model(self, rows):
+        """Rows were just written into free/evicted slots; append them to the
+        model in one blocked update.
 
         The inverse is maintained over the *ordering* [active rows]; we keep a
         permutation-free scheme by always appending logically: position in the
         inverse == position in ``self._order``.
         """
-        if not hasattr(self, "_order"):
-            self._order = []
-        rows = [x for x in self._order]
-        col, diag = self._cov_against_active(r, rows)
-        self._sigma[r, rows] = col
-        self._sigma[rows, r] = col
-        self._sigma[r, r] = diag
-        self._updates_since_refactor += 1
+        rows = [int(r) for r in rows]
+        prev = list(self._order)
+        cols, block = self._cov_blocks(rows, prev)
+        self._sigma[np.ix_(rows, prev)] = cols
+        self._sigma[np.ix_(prev, rows)] = cols.T
+        self._sigma[np.ix_(rows, rows)] = block
+        self._updates_since_refactor += len(rows)
+        self._order.extend(rows)
         if self._updates_since_refactor >= REFACTOR_EVERY:
-            self._order.append(r)
             self._refactor()
             return
-        self._sigma_inv = inv_append_row(
-            self._sigma_inv, jnp.asarray(col), jnp.asarray(diag)
+        self._sigma_inv = inv_append_block(
+            self._sigma_inv, jnp.asarray(cols), jnp.asarray(block)
         )
-        self._order.append(r)
 
-    def _delete_from_model(self, r, already_removed_row=True):
-        if r not in getattr(self, "_order", []):
+    def _insert_into_model(self, r):
+        self._insert_block_into_model([r])
+
+    def _delete_from_model(self, r):
+        self._delete_block_from_model([r])
+
+    def _delete_block_from_model(self, rows):
+        members = set(self._order)
+        rows = [int(r) for r in rows if int(r) in members]
+        if not rows:
             return
-        pos = self._order.index(r)
-        self._sigma_inv = inv_delete_row(self._sigma_inv, pos)
-        self._order.pop(pos)
-        self._updates_since_refactor += 1
+        pos = sorted(self._order.index(r) for r in rows)
+        self._sigma_inv = inv_delete_block(self._sigma_inv, pos)
+        for p in reversed(pos):
+            self._order.pop(p)
+        self._updates_since_refactor += len(pos)
 
     def _refactor(self):
         """Full O(n^3) rebuild of Sigma^{-1} from Sigma (numerical hygiene)."""

@@ -124,6 +124,46 @@ class SnippetBatch:
         )
 
 
+SNIPPET_TILE = 128
+
+
+def snippet_key(lo, hi, cat, agg, measure) -> int:
+    """Content hash of one snippet (host-side numpy rows).
+
+    The shared dedup key: ``Synopsis`` uses it for LRU/replacement bookkeeping
+    and ``BatchExecutor`` uses it to fuse identical snippets across queries.
+    """
+    return hash(
+        (lo.tobytes(), hi.tobytes(), cat.tobytes(), int(agg), int(measure))
+    )
+
+
+def pad_snippets(snippets: "SnippetBatch", multiple: int = SNIPPET_TILE) -> "SnippetBatch":
+    """Pad the snippet axis up to the next multiple of ``multiple``.
+
+    Scanning a shape-stable (T, n_pad) mask keeps one compiled program per
+    size bucket instead of one per distinct plan, and — because each output
+    element's reduction over tuples is independent of its sibling columns —
+    makes per-snippet partials bitwise reproducible across different plans
+    (the property the batched executor's answer-parity guarantee rests on).
+    Padding rows are full-domain FREQ snippets; callers slice them away.
+    """
+    n = snippets.n
+    target = max(((n + multiple - 1) // multiple) * multiple, multiple)
+    if target == n:
+        return snippets
+    k = target - n
+    l = snippets.lo.shape[1]
+    c, v = snippets.cat.shape[1], snippets.cat.shape[2]
+    return SnippetBatch(
+        lo=jnp.concatenate([snippets.lo, jnp.zeros((k, l))]),
+        hi=jnp.concatenate([snippets.hi, jnp.ones((k, l))]),
+        cat=jnp.concatenate([snippets.cat, jnp.ones((k, c, v), dtype=bool)]),
+        agg=jnp.concatenate([snippets.agg, jnp.full((k,), FREQ, jnp.int32)]),
+        measure=jnp.concatenate([snippets.measure, jnp.zeros((k,), jnp.int32)]),
+    )
+
+
 def make_snippets(
     schema: Schema,
     *,
@@ -138,9 +178,13 @@ def make_snippets(
     cat_sets:   list (len n) of dict {dim: iterable of category ids}.
     agg:        int or list of ints; measure likewise.
     """
-    num_ranges = num_ranges or [{}]
+    # An explicitly-empty list is a valid 0-snippet batch (e.g. decompose()
+    # over zero groups); only None means "one unconstrained snippet".
+    if num_ranges is None:
+        num_ranges = [{}]
     n = len(num_ranges)
-    cat_sets = cat_sets or [{} for _ in range(n)]
+    if cat_sets is None:
+        cat_sets = [{} for _ in range(n)]
     if len(cat_sets) != n:
         raise ValueError("num_ranges and cat_sets length mismatch")
     l, c, v = schema.n_num, schema.n_cat, max(schema.cat_vmax, 1)

@@ -1,1 +1,2 @@
 from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.serving.aqp import AqpService, Ticket

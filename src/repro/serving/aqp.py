@@ -1,0 +1,84 @@
+"""Microbatching AQP front: collect operator queries, flush one fused scan.
+
+The serving-side counterpart of ``repro.aqp.batch``: concurrent dashboard
+clients submit ``AggQuery``s; the service coalesces up to ``max_batch``
+requests and executes them through ``BatchExecutor`` under the service-wide
+``target_rel_error``, so the relation's sample batches are scanned once per
+flush instead of once per request. Tickets resolve to ``QueryResult``s after
+the flush — the classic serving microbatch pattern (cf. decode-step batching
+in ``repro.serving.engine``) applied to query answering.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.aqp.batch import BatchExecutor, BatchStats
+from repro.aqp.queries import AggQuery
+
+
+@dataclasses.dataclass
+class Ticket:
+    """Handle for one submitted query; resolved by the owning flush.
+
+    The result is stored on the ticket itself, so a long-lived service
+    retains nothing once callers drop their tickets.
+    """
+
+    _service: "AqpService"
+    _result: object = None
+    _done: bool = False
+
+    def result(self):
+        """The query's ``QueryResult`` (flushes the queue if still pending)."""
+        if not self._done:
+            self._service.flush()
+        return self._result
+
+
+class AqpService:
+    """Synchronous microbatcher over one ``VerdictEngine``.
+
+    ``max_batch``: auto-flush threshold; ``target_rel_error``: default error
+    target applied to every flush (per the batched engine's per-query early
+    stopping); ``mesh``: optional device mesh for the sharded scan path.
+    """
+
+    def __init__(self, engine, max_batch: int = 64,
+                 target_rel_error: Optional[float] = None, mesh=None):
+        self.engine = engine
+        self.max_batch = int(max_batch)
+        self.target_rel_error = target_rel_error
+        self.executor = BatchExecutor(engine, mesh=mesh)
+        self._queue: List[tuple] = []  # (query, ticket) pairs
+        self.flushes = 0
+        self.last_stats: Optional[BatchStats] = None
+
+    def submit(self, query: AggQuery) -> Ticket:
+        """Enqueue one query; auto-flushes when the microbatch is full."""
+        ticket = Ticket(self)
+        self._queue.append((query, ticket))
+        if len(self._queue) >= self.max_batch:
+            self.flush()
+        return ticket
+
+    def flush(self) -> List:
+        """Execute all pending queries in one fused scan."""
+        if not self._queue:
+            return []
+        batch, self._queue = self._queue, []
+        results = self.executor.execute_many(
+            [q for q, _ in batch], target_rel_error=self.target_rel_error
+        )
+        for (_, ticket), res in zip(batch, results):
+            ticket._result = res
+            ticket._done = True
+        self.last_stats = self.executor.stats
+        self.flushes += 1
+        return results
+
+    def execute(self, queries: List[AggQuery]) -> List:
+        """Convenience: submit a workload and return its results in order."""
+        tickets = [self.submit(q) for q in queries]
+        self.flush()
+        return [t.result() for t in tickets]

@@ -16,7 +16,7 @@ from repro.core.synopsis import Synopsis
 
 @pytest.fixture(scope="module")
 def relation():
-    return W.make_relation(seed=0, n_rows=20_000, n_num=2, cat_sizes=(4,),
+    return W.make_relation(seed=0, n_rows=12_000, n_num=2, cat_sizes=(4,),
                            n_measures=1, lengthscale=0.4, noise=0.2)
 
 
@@ -24,14 +24,13 @@ def relation():
 def trained_engines(relation):
     train_q = W.make_workload(1, relation.schema, 40, agg_kinds=("AVG",),
                               width_range=(0.15, 0.5), cat_pred_prob=0.2)
-    cfg_v = EngineConfig(sample_rate=0.15, n_batches=8, capacity=256, seed=0)
-    cfg_n = EngineConfig(sample_rate=0.15, n_batches=8, capacity=256, seed=0,
+    cfg_v = EngineConfig(sample_rate=0.15, n_batches=6, capacity=256, seed=0)
+    cfg_n = EngineConfig(sample_rate=0.15, n_batches=6, capacity=256, seed=0,
                          learning=False)
     verdict = VerdictEngine(relation, cfg_v)
     nolearn = VerdictEngine(relation, cfg_n)
-    for q in train_q:
-        verdict.execute(q, max_batches=8)
-    verdict.refit(steps=80)
+    verdict.execute_many(train_q)  # one fused scan for the training workload
+    verdict.refit(steps=60)
     return verdict, nolearn
 
 
@@ -51,9 +50,9 @@ def test_engine_reduces_error_bounds_and_actual_error(relation, trained_engines)
                              width_range=(0.15, 0.5), cat_pred_prob=0.2)
     imp_bounds, raw_bounds, imp_errs, raw_errs = [], [], [], []
     n_accepted = 0
-    for q in test_q:
-        rv = verdict.execute(q, max_batches=2)
-        rn = nolearn.execute(q, max_batches=2)
+    rv_all = verdict.execute_many(test_q, max_batches=2)
+    rn_all = nolearn.execute_many(test_q, max_batches=2)
+    for q, rv, rn in zip(test_q, rv_all, rn_all):
         exact = _exact(relation, verdict, q)
         for cv, cn in zip(rv.cells, rn.cells):
             ex = exact[(cv["group"], cv["agg"])]
@@ -75,12 +74,10 @@ def test_engine_speedup_batches_to_target(relation, trained_engines):
     verdict, nolearn = trained_engines
     test_q = W.make_workload(3, relation.schema, 10, agg_kinds=("AVG",),
                              width_range=(0.2, 0.5), cat_pred_prob=0.0)
-    v_batches = n_batches = 0
-    for q in test_q:
-        rv = verdict.execute(q, target_rel_error=0.02)
-        rn = nolearn.execute(q, target_rel_error=0.02)
-        v_batches += rv.batches_used
-        n_batches += rn.batches_used
+    rv_all = verdict.execute_many(test_q, target_rel_error=0.02)
+    rn_all = nolearn.execute_many(test_q, target_rel_error=0.02)
+    v_batches = sum(r.batches_used for r in rv_all)
+    n_batches = sum(r.batches_used for r in rn_all)
     assert v_batches <= n_batches  # Verdict reaches the target no slower
 
 
@@ -121,8 +118,7 @@ def test_groupby_and_sum_count(relation):
 def test_validation_rejects_corrupt_model(relation):
     eng = VerdictEngine(relation, EngineConfig(sample_rate=0.15, n_batches=4,
                                                capacity=128))
-    for q in W.make_workload(5, relation.schema, 10, agg_kinds=("AVG",)):
-        eng.execute(q)
+    eng.execute_many(W.make_workload(5, relation.schema, 10, agg_kinds=("AVG",)))
     # Corrupt the model: shift the prior mean absurdly and rebuild.
     for syn in eng.synopses.values():
         syn.params = GPParams(log_ls=syn.params.log_ls - 5.0,  # tiny ls
@@ -170,14 +166,13 @@ def test_learning_recovers_lengthscales():
 def test_append_adjustment_keeps_bounds_valid():
     """App. D: after drifted appends, adjusted bounds stay valid."""
     rng = np.random.default_rng(1)
-    rel = W.make_relation(seed=10, n_rows=10_000, n_num=2, cat_sizes=(),
+    rel = W.make_relation(seed=10, n_rows=8_000, n_num=2, cat_sizes=(),
                           n_measures=1, noise=0.1)
     eng = VerdictEngine(rel, EngineConfig(sample_rate=0.2, n_batches=4, capacity=64))
     qs = W.make_workload(7, rel.schema, 12, agg_kinds=("AVG",), cat_pred_prob=0.0)
-    for q in qs[:8]:
-        eng.execute(q)
+    eng.execute_many(qs[:8])
     # Append 20% new rows with +0.8 shifted measure values.
-    extra = rel.take(np.arange(2_000))
+    extra = rel.take(np.arange(1_600))
     extra.measures = extra.measures + 0.8
     stats = estimate_append_stats(
         np.asarray(rel.measures[:500]), np.asarray(extra.measures[:500]),

@@ -74,7 +74,7 @@ def test_eq11_12_matches_direct_conditional():
     assert float(b2[0]) == pytest.approx(var_c, rel=1e-8)
 
 
-@pt.given(n_cases=15, seed=7, n=pt.ints(1, 20), b=pt.floats(0.01, 0.5))
+@pt.given(n_cases=10, seed=7, n=pt.choice([1, 8, 20]), b=pt.floats(0.01, 0.5))
 def test_theorem1_improved_error_never_larger(n, b):
     rng = np.random.default_rng(int(n * 1000 + b * 100))
     sch = _schema()

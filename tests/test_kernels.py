@@ -109,6 +109,39 @@ def test_eval_partials_kernel_matches_executor():
                                rtol=2e-4)
 
 
+@pytest.mark.parametrize("cat_sizes", [(), (5,)])
+@pytest.mark.parametrize("n_rows", [1000, 1237])  # incl. non-multiple of tile_t
+def test_eval_partials_kernel_on_deduped_fused_batches(cat_sizes, n_rows):
+    """Kernel vs pure-jnp parity on the fused path's actual input: randomized
+    cross-query DEDUPED snippet batches, zero-categorical-columns case, and
+    snippet/tuple counts that are not multiples of the kernel tiles."""
+    from repro.aqp import workload as W
+    from repro.aqp.batch import _Deduper
+    from repro.aqp.executor import eval_partials
+    from repro.aqp.queries import decompose
+    from repro.core.types import pad_snippets
+
+    rel = W.make_relation(seed=11, n_rows=n_rows, n_num=3, cat_sizes=cat_sizes,
+                          n_measures=2)
+    qs = W.make_workload(12, rel.schema, 20,
+                         cat_pred_prob=0.4 if cat_sizes else 0.0)
+    qs = qs + qs[:7]  # repeats: dedup has work to do
+    dedup = _Deduper(rel.schema)
+    for q in qs:
+        dedup.intern(decompose(rel.schema, q).snippets)
+    assert dedup.n < sum(decompose(rel.schema, q).snippets.n for q in qs)
+    for snips in (dedup.fused(), pad_snippets(dedup.fused())):
+        want = eval_partials(rel.num_normalized, rel.cat, rel.measures, snips)
+        got = eval_partials_kernel(rel.num_normalized, rel.cat, rel.measures,
+                                   snips)
+        np.testing.assert_allclose(np.asarray(got.count),
+                                   np.asarray(want.count))
+        np.testing.assert_allclose(np.asarray(got.sums),
+                                   np.asarray(want.sums), rtol=2e-4, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(got.sumsq),
+                                   np.asarray(want.sumsq), rtol=2e-4, atol=1e-3)
+
+
 # ------------------------------------------------------------ gp_batch_infer
 @pytest.mark.parametrize("q,c", [(1, 16), (64, 128), (100, 300), (256, 1000)])
 def test_gp_batch_infer_matches_ref(q, c):

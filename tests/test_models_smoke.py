@@ -28,7 +28,16 @@ def _batch(cfg, key):
     return batch
 
 
-@pytest.mark.parametrize("arch", configs.names())
+# The two heaviest smoke configs dominate tier-1 wall clock; run them via
+# `pytest -m slow` (CI nightly) instead of on every tier-1 invocation.
+_HEAVY = {"hymba-1.5b", "arctic-480b"}
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+     for a in configs.names()],
+)
 def test_forward_and_train_step(arch):
     cfg = configs.get_smoke(arch)
     key = jax.random.PRNGKey(0)
@@ -56,9 +65,12 @@ def test_forward_and_train_step(arch):
     assert max(delta) > 0
 
 
-@pytest.mark.parametrize("arch", ["qwen2.5-3b", "gemma2-2b", "rwkv6-3b",
-                                  "hymba-1.5b", "seamless-m4t-medium",
-                                  "llama-3.2-vision-11b", "arctic-480b"])
+@pytest.mark.parametrize(
+    "arch",
+    [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+     for a in ["qwen2.5-3b", "gemma2-2b", "rwkv6-3b", "hymba-1.5b",
+               "seamless-m4t-medium", "llama-3.2-vision-11b", "arctic-480b"]],
+)
 def test_decode_matches_prefill(arch):
     """Greedy decode equals teacher-forced forward argmax (cache correctness)."""
     cfg = configs.get_smoke(arch)

@@ -1,0 +1,205 @@
+"""Property tests for the synopsis' incremental inverse maintenance:
+rank-1 and blocked rank-k append/delete vs ``jnp.linalg.inv``, round-trips,
+and the evict-then-insert ordering ``Synopsis.add`` exercises."""
+import numpy as np
+import jax.numpy as jnp
+
+import proptest as pt
+from repro.core.synopsis import (
+    Synopsis,
+    inv_append_block,
+    inv_append_row,
+    inv_delete_block,
+    inv_delete_row,
+)
+from repro.core.types import AVG, Schema, SnippetBatch, make_snippets
+
+
+def _spd(rng, n, scale=1.0):
+    a = rng.normal(size=(n, n))
+    return scale * (a @ a.T / n + np.eye(n))
+
+
+def _grow(rng, spd, k):
+    """Extend an SPD matrix by k rows/cols, staying SPD."""
+    n = spd.shape[0]
+    b = rng.normal(0, 0.3, size=(k, n))
+    d = b @ np.linalg.solve(spd, b.T) + _spd(rng, k)
+    full = np.zeros((n + k, n + k))
+    full[:n, :n] = spd
+    full[:n, n:] = b.T
+    full[n:, :n] = b
+    full[n:, n:] = d
+    return full, b, d
+
+
+@pt.given(n_cases=8, seed=1, n=pt.choice([1, 4, 9, 17]))
+def test_inv_append_row_matches_direct_inverse(n):
+    rng = np.random.default_rng(n)
+    full, b, d = _grow(rng, _spd(rng, n), 1)
+    got = inv_append_row(jnp.asarray(np.linalg.inv(full[:n, :n])),
+                         jnp.asarray(b[0]), float(d[0, 0]))
+    np.testing.assert_allclose(np.asarray(got), np.linalg.inv(full),
+                               rtol=1e-6, atol=1e-8)
+
+
+@pt.given(n_cases=8, seed=2, n=pt.choice([2, 9, 17]), k=pt.choice([1, 3, 6]))
+def test_inv_append_block_matches_direct_inverse(n, k):
+    rng = np.random.default_rng(n * 31 + k)
+    full, b, d = _grow(rng, _spd(rng, n), k)
+    got = inv_append_block(jnp.asarray(np.linalg.inv(full[:n, :n])),
+                           jnp.asarray(b), jnp.asarray(d))
+    np.testing.assert_allclose(np.asarray(got), np.linalg.inv(full),
+                               rtol=1e-6, atol=1e-8)
+
+
+def test_inv_append_block_k1_equals_append_row():
+    rng = np.random.default_rng(7)
+    n = 9
+    full, b, d = _grow(rng, _spd(rng, n), 1)
+    ainv = jnp.asarray(np.linalg.inv(full[:n, :n]))
+    row = inv_append_row(ainv, jnp.asarray(b[0]), float(d[0, 0]))
+    blk = inv_append_block(ainv, jnp.asarray(b), jnp.asarray(d))
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(row),
+                               rtol=1e-8, atol=1e-10)
+
+
+@pt.given(n_cases=8, seed=3, n=pt.choice([3, 9, 17]))
+def test_inv_delete_row_matches_direct_inverse(n):
+    rng = np.random.default_rng(n + 100)
+    spd = _spd(rng, n)
+    r = int(rng.integers(0, n))
+    keep = np.r_[0:r, r + 1 : n]
+    got = inv_delete_row(jnp.asarray(np.linalg.inv(spd)), r)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.linalg.inv(spd[np.ix_(keep, keep)]),
+                               rtol=1e-6, atol=1e-8)
+
+
+@pt.given(n_cases=8, seed=4, n=pt.choice([4, 9, 17]), k=pt.choice([1, 3]))
+def test_inv_delete_block_matches_direct_inverse(n, k):
+    rng = np.random.default_rng(n * 17 + k)
+    spd = _spd(rng, n)
+    pos = np.sort(rng.choice(n, size=min(k, n - 1), replace=False))
+    keep = np.setdiff1d(np.arange(n), pos)
+    got = inv_delete_block(jnp.asarray(np.linalg.inv(spd)), pos)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.linalg.inv(spd[np.ix_(keep, keep)]),
+                               rtol=1e-6, atol=1e-8)
+
+
+@pt.given(n_cases=8, seed=5, n=pt.choice([2, 9, 17]), k=pt.choice([1, 4]))
+def test_append_then_delete_roundtrip(n, k):
+    """Appending k rows then deleting them restores the original inverse."""
+    rng = np.random.default_rng(n * 13 + k)
+    spd = _spd(rng, n)
+    ainv = np.linalg.inv(spd)
+    full, b, d = _grow(rng, spd, k)
+    grown = inv_append_block(jnp.asarray(ainv), jnp.asarray(b), jnp.asarray(d))
+    back = inv_delete_block(grown, np.arange(n, n + k))
+    np.testing.assert_allclose(np.asarray(back), ainv, rtol=1e-6, atol=1e-8)
+
+
+# --------------------------------------------------------- Synopsis.add path
+def _schema():
+    return Schema(num_lo=(0.0, 0.0), num_hi=(1.0, 1.0), cat_sizes=(),
+                  n_measures=1)
+
+
+def _snips(rng, n):
+    ranges = []
+    for _ in range(n):
+        r = {}
+        for d in range(2):
+            a = rng.uniform(0, 0.7)
+            r[d] = (a, a + rng.uniform(0.05, 0.3))
+        ranges.append(r)
+    return make_snippets(_schema(), agg=AVG, measure=0, num_ranges=ranges)
+
+
+def _model_inverse_error(syn):
+    rows = np.asarray(syn._order, np.int64)
+    sig = syn._sigma[np.ix_(rows, rows)]
+    direct = np.linalg.inv(sig + 1e-10 * np.eye(len(rows)))
+    return np.max(np.abs(np.asarray(syn._sigma_inv) - direct))
+
+
+@pt.given(n_cases=5, seed=6, capacity=pt.choice([4, 8]), total=pt.choice([13, 21]),
+          chunk=pt.choice([1, 3, 7]))
+def test_synopsis_add_evict_then_insert_keeps_inverse_consistent(
+        capacity, total, chunk):
+    """Chunked adds overflowing capacity (evict + blocked insert in one call)
+    must leave Sigma^{-1} equal to the direct inverse of the kept rows."""
+    rng = np.random.default_rng(capacity * 1000 + total * 10 + chunk)
+    syn = Synopsis(_schema(), capacity=capacity)
+    snips = _snips(rng, total)
+    theta = rng.normal(1.0, 0.3, total)
+    beta2 = rng.uniform(0.01, 0.2, total)
+    for s in range(0, total, chunk):
+        e = min(s + chunk, total)
+        syn.add(snips[jnp.arange(s, e)], theta[s:e], beta2[s:e])
+        assert syn.n <= capacity
+        assert len(syn._order) == syn.n
+        assert _model_inverse_error(syn) < 1e-6
+    assert syn.n == min(capacity, total)
+
+
+def test_synopsis_add_dedup_keeps_better_answer_and_refreshes_lru():
+    rng = np.random.default_rng(0)
+    syn = Synopsis(_schema(), capacity=8)
+    snips = _snips(rng, 4)
+    syn.add(snips, np.full(4, 1.0), np.full(4, 0.1))
+    assert syn.n == 4
+    # Re-add the same snippets with a worse error: values must not change.
+    syn.add(snips, np.full(4, 9.0), np.full(4, 0.5))
+    assert syn.n == 4
+    np.testing.assert_allclose(syn.theta(), np.full(4, 1.0))
+    np.testing.assert_allclose(syn.beta2(), np.full(4, 0.1))
+    # Better error: replaced, and the model diagonal follows (delete+insert).
+    syn.add(snips[jnp.arange(1)], np.asarray([2.0]), np.asarray([0.01]))
+    assert syn.n == 4
+    assert float(syn.theta()[0]) == 2.0
+    assert float(syn.beta2()[0]) == 0.01
+    assert _model_inverse_error(syn) < 1e-6
+    # LRU: rows 1..3 are now stale; filling capacity evicts them first.
+    fresh = _snips(np.random.default_rng(1), 7)
+    syn.add(fresh, np.full(7, 1.0), np.full(7, 0.1))
+    assert syn.n == 8
+    remaining = {float(t) for t in syn.theta()}
+    assert 2.0 in remaining  # row 0 was refreshed by the better re-add
+    assert _model_inverse_error(syn) < 1e-6
+
+
+def test_synopsis_add_more_new_than_capacity_keeps_most_recent():
+    rng = np.random.default_rng(3)
+    syn = Synopsis(_schema(), capacity=5)
+    snips = _snips(rng, 12)
+    theta = np.arange(12, dtype=float)
+    syn.add(snips, theta, np.full(12, 0.1))
+    assert syn.n == 5
+    # The most recent ``capacity`` snippets survive (LRU semantics).
+    assert sorted(float(t) for t in syn.theta()) == [7.0, 8.0, 9.0, 10.0, 11.0]
+    assert _model_inverse_error(syn) < 1e-6
+
+
+def test_synopsis_add_overflow_respects_intra_batch_lru():
+    """A snippet re-occurring late in an overflowing batch is the most
+    recently used and must survive the truncation."""
+    rng = np.random.default_rng(5)
+    syn = Synopsis(_schema(), capacity=2)
+    base = _snips(rng, 3)
+    # Batch [A, B, C, A]: with capacity 2 the survivors must be {C, A}.
+    batch = SnippetBatch.concat([base, base[jnp.arange(1)]])
+    syn.add(batch, np.asarray([1.0, 2.0, 3.0, 1.0]), np.full(4, 0.1))
+    assert syn.n == 2
+    assert sorted(float(t) for t in syn.theta()) == [1.0, 3.0]
+    assert _model_inverse_error(syn) < 1e-6
+
+
+def test_synopsis_add_skips_nonfinite_answers():
+    rng = np.random.default_rng(4)
+    syn = Synopsis(_schema(), capacity=8)
+    snips = _snips(rng, 3)
+    syn.add(snips, np.asarray([1.0, np.nan, 2.0]),
+            np.asarray([0.1, 0.1, np.inf]))
+    assert syn.n == 1
