@@ -1,0 +1,228 @@
+"""Serve-path latency: bucket-padded improve vs the capacity-padded baseline.
+
+Measures the tentpole claim of the bucketed serve path: padding the synopsis
+state to fill-level buckets (powers of two) instead of full capacity makes
+``Synopsis.improve`` cost scale with the actual fill, so at realistic fills
+(n <= 256 against C = 2000) the p50 serve latency drops by well over the 5x
+acceptance bar. Also checks the two safety properties that make the speedup
+admissible:
+
+  - batched answers stay bitwise equal to the sequential ``execute`` oracle
+    (both serve through the same bucketed programs);
+  - a mixed-Q workload compiles a bounded number of programs — one per
+    (Q-bucket, fill-bucket) pair — instead of one per distinct Q.
+
+    PYTHONPATH=src python benchmarks/improve_bench.py [--smoke] [--out f.json]
+
+Prints ``name,value`` CSV rows plus one ``BENCH {json}`` line; ``--out``
+writes the same JSON to a file (uploaded as a CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.aqp import workload as W
+from repro.core.synopsis import (
+    MIN_FILL_BUCKET,
+    MIN_Q_BUCKET,
+    Synopsis,
+    _improve_padded,
+)
+from repro.core.types import (
+    AVG,
+    RawAnswer,
+    Schema,
+    bucket_size,
+    make_snippets,
+)
+
+
+def _random_batch(rng, sch, n):
+    ranges = []
+    for _ in range(n):
+        r = {}
+        for d in range(sch.n_num):
+            a = rng.uniform(0, 0.6)
+            r[d] = (a, a + rng.uniform(0.05, 0.4))
+        ranges.append(r)
+    return make_snippets(sch, agg=AVG, measure=0, num_ranges=ranges)
+
+
+def _capacity_padded_state(syn):
+    """The pre-PR serve buffers: padded to full capacity C."""
+    C = syn.capacity
+    rows = np.asarray(syn._order, np.int64)
+    n = len(rows)
+    idx = np.concatenate([rows, np.zeros((C - n,), np.int64)])
+    past = syn._row_batch(idx)
+    valid = jnp.asarray(np.arange(C) < n, jnp.float64)
+    sinv = np.eye(C)
+    sinv[:n, :n] = np.asarray(syn._sigma_inv)
+    alpha = np.zeros((C,))
+    alpha[:n] = np.asarray(syn._alpha)
+    return past, valid, jnp.asarray(sinv), jnp.asarray(alpha)
+
+
+def _p50_ms(fn, iters):
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn()
+        out[0].block_until_ready()
+        times.append((time.perf_counter() - t0) * 1e3)
+    return float(np.percentile(times, 50))
+
+
+def bench_improve_latency(capacity, fills, q, iters, seed=0):
+    """p50 serve latency per fill level: bucketed path vs capacity padding."""
+    rng = np.random.default_rng(seed)
+    sch = Schema(num_lo=(0.0, 0.0), num_hi=(1.0, 1.0), cat_sizes=(4,),
+                 n_measures=1)
+    out = {}
+    for fill in fills:
+        syn = Synopsis(sch, capacity=capacity, async_ingest=False)
+        syn.add(_random_batch(rng, sch, fill), rng.normal(1.0, 0.3, fill),
+                rng.uniform(0.01, 0.05, fill))
+        new = _random_batch(rng, sch, q)
+        raw = RawAnswer(jnp.asarray(rng.normal(1.0, 0.3, q)),
+                        jnp.asarray(np.full(q, 0.02)))
+
+        def bucketed():
+            imp = syn.improve(new, raw)
+            return (imp.theta, imp.beta2)
+
+        base_state = _capacity_padded_state(syn)
+
+        def baseline():
+            theta, beta2, _ = _improve_padded(
+                *base_state, syn.params, new, raw.theta, raw.beta2,
+                syn.delta_v,
+            )
+            return (theta, beta2)
+
+        bucketed()  # warm both programs (compile is a one-off cost)
+        baseline()
+        p50_b = _p50_ms(bucketed, iters)
+        p50_c = _p50_ms(baseline, iters)
+        out[str(fill)] = {
+            "fill_bucket": syn._fill_bucket(),
+            "p50_bucketed_ms": p50_b,
+            "p50_capacity_ms": p50_c,
+            "speedup_p50": p50_c / max(p50_b, 1e-9),
+        }
+    return out
+
+
+def bench_mixed_q_programs(capacity, fills, q_list, seed=1):
+    """Programs compiled by a mixed-Q workload vs the bucket-pair bound."""
+    rng = np.random.default_rng(seed)
+    sch = Schema(num_lo=(0.0, 0.0), num_hi=(1.0, 1.0), cat_sizes=(4,),
+                 n_measures=1)
+    syns = []
+    for fill in fills:
+        syn = Synopsis(sch, capacity=capacity, async_ingest=False)
+        syn.add(_random_batch(rng, sch, fill), rng.normal(1.0, 0.3, fill),
+                rng.uniform(0.01, 0.05, fill))
+        syns.append(syn)
+    before = _improve_padded._cache_size()
+    for q in q_list:
+        for syn in syns:
+            new = _random_batch(rng, sch, q)
+            raw = RawAnswer(jnp.asarray(rng.normal(1.0, 0.3, q)),
+                            jnp.asarray(np.full(q, 0.02)))
+            syn.improve(new, raw)
+    programs = _improve_padded._cache_size() - before
+    q_buckets = {bucket_size(q, MIN_Q_BUCKET) for q in q_list}
+    fill_buckets = {syn._fill_bucket() for syn in syns}
+    return {
+        "distinct_q": len(set(q_list)),
+        "q_buckets": sorted(q_buckets),
+        "fill_buckets": sorted(fill_buckets),
+        "programs_compiled": int(programs),
+        "bound": len(q_buckets) * len(fill_buckets),
+    }
+
+
+def bench_oracle_parity(n_queries, n_rows, seed=2):
+    """Batched answers vs the sequential ``execute`` oracle, bit for bit."""
+    from repro.core.engine import EngineConfig, VerdictEngine
+
+    rel = W.make_relation(seed=seed, n_rows=n_rows, n_num=2, cat_sizes=(4,),
+                          n_measures=1, lengthscale=0.4, noise=0.2)
+    qs = W.make_workload(1, rel.schema, n_queries,
+                         agg_kinds=("AVG", "COUNT", "SUM"), cat_pred_prob=0.3)
+    cfg = dict(sample_rate=0.15, n_batches=4, capacity=256, seed=0)
+    seq = VerdictEngine(rel, EngineConfig(**cfg))
+    bat = VerdictEngine(rel, EngineConfig(**cfg))
+    r_seq = [seq.execute(q) for q in qs]
+    r_bat = bat.execute_many(qs)
+    equal = all(a.cells == b.cells and a.batches_used == b.batches_used
+                for a, b in zip(r_seq, r_bat))
+    return {"n_queries": n_queries, "bitwise_equal": bool(equal)}
+
+
+def bench(smoke=False):
+    if smoke:
+        capacity, fills, q, iters = 256, (8, 32), 8, 5
+        q_list = [1, 3, 8, 12, 17]
+        oracle = bench_oracle_parity(n_queries=6, n_rows=2_000)
+    else:
+        capacity, fills, q, iters = 2000, (16, 64, 256), 16, 40
+        q_list = list(range(1, 9)) + [12, 16, 23, 31, 40, 64]
+        oracle = bench_oracle_parity(n_queries=20, n_rows=20_000)
+    latency = bench_improve_latency(capacity, fills, q, iters)
+    mixed = bench_mixed_q_programs(capacity, fills[:2], q_list)
+    report = {
+        "capacity": capacity,
+        "q": q,
+        "min_fill_bucket": MIN_FILL_BUCKET,
+        "min_q_bucket": MIN_Q_BUCKET,
+        "latency": latency,
+        "mixed_q": mixed,
+        "oracle": oracle,
+    }
+    rows = []
+    for fill, r in latency.items():
+        rows.append((f"improve/p50_bucketed_ms_n{fill}", r["p50_bucketed_ms"]))
+        rows.append((f"improve/p50_capacity_ms_n{fill}", r["p50_capacity_ms"]))
+        rows.append((f"improve/speedup_p50_n{fill}", r["speedup_p50"]))
+    rows.append(("improve/mixed_q_programs", float(mixed["programs_compiled"])))
+    rows.append(("improve/mixed_q_bound", float(mixed["bound"])))
+    rows.append(("improve/oracle_bitwise_equal", float(oracle["bitwise_equal"])))
+    return rows, report
+
+
+def run():
+    """Entry point for ``benchmarks.run`` suite registration."""
+    rows, _ = bench()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, CI smoke: checks the path end-to-end")
+    ap.add_argument("--out", default="",
+                    help="write the BENCH JSON report to this file")
+    args = ap.parse_args()
+    rows, report = bench(smoke=args.smoke)
+    for name, val in rows:
+        print(f"{name},{val:.4g}")
+    blob = json.dumps(report)
+    print(f"BENCH {blob}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+    ok = (report["oracle"]["bitwise_equal"]
+          and report["mixed_q"]["programs_compiled"] <= report["mixed_q"]["bound"])
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,12 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import batch_bench, kernels_bench, paper_tables, roofline_report
+    from benchmarks import (batch_bench, improve_bench, kernels_bench,
+                            paper_tables, roofline_report)
 
     suites = {
         "batch": batch_bench.run,
+        "improve": improve_bench.run,
         "table3": paper_tables.table3_generality,
         "table4": paper_tables.table4_speedup_error,
         "table5": paper_tables.table5_overhead,

@@ -23,6 +23,13 @@ each query's plan separately re-reads the same sample batches over and over.
    meets the target, and record raw answers — the same state transitions, in
    the same order, as query-at-a-time execution.
 
+Learning is asynchronous: ``_record`` enqueues raw answers on the synopsis'
+background ingest thread and ``execute_many`` returns without waiting for the
+covariance builds. Each replayed ``_improve`` drains only its own synopsis'
+pending batches (so the state transitions stay deterministic and identical to
+the sequential engine); a full barrier (``VerdictEngine.drain``) is only
+needed at snapshot/refit boundaries.
+
 Because the scan path pads the snippet axis to fixed tiles
 (``pad_snippets``), per-snippet partials are bitwise identical between the
 fused scan and the single-query scan; the replay then performs the exact
@@ -176,13 +183,19 @@ class BatchExecutor:
         # Two fused sets, mirroring the sequential engine exactly: supported
         # queries scan through the engine's eval fn (kernel / mesh capable),
         # raw-only probes through pure eval_partials (engine.py does the same).
+        # Group discovery is fused too: ONE first-batch predicate_mask eval
+        # covers every query's probe (identical booleans to per-query probes).
         dedup = _Deduper(eng.schema)
         dedup_raw = _Deduper(eng.schema)
         pend: List[_Pending] = []
+        reasons = [Q.unsupported_reason(q) for q in queries]
+        probes = [q if r is None else eng.raw_only_probe(q)
+                  for q, r in zip(queries, reasons)]
+        groups_all = eng._discover_groups_many(probes)
         for qi, q in enumerate(queries):
-            reason = Q.unsupported_reason(q)
-            probe = q if reason is None else eng.raw_only_probe(q)
-            groups = eng._discover_groups(probe)
+            reason = reasons[qi]
+            probe = probes[qi]
+            groups = groups_all[qi]
             if reason is None and not groups:
                 results[qi] = QueryResult([], 0, 0, True, plan=None)
                 continue

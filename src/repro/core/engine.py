@@ -16,8 +16,9 @@ Workflow per query:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -25,7 +26,12 @@ from repro.aqp import queries as Q
 from repro.aqp.executor import estimates_from_partials, eval_partials, Partials
 from repro.aqp.relation import Relation
 from repro.aqp.sampler import SampleBatches, build_sample
-from repro.core.synopsis import Synopsis
+from repro.core.synopsis import (
+    MIN_Q_BUCKET,
+    Synopsis,
+    _improve_stacked,
+    _pad_raw,
+)
 from repro.core.types import (
     AVG,
     FREQ,
@@ -33,6 +39,7 @@ from repro.core.types import (
     RawAnswer,
     Schema,
     SnippetBatch,
+    bucket_size,
     pad_snippets,
 )
 from repro.utils.stats import confidence_multiplier
@@ -49,6 +56,7 @@ class EngineConfig:
     learning: bool = True
     seed: int = 0
     use_kernels: bool = False  # route hot paths through the Pallas kernels
+    async_ingest: bool = True  # learn on the background ingest thread
 
 
 @dataclasses.dataclass
@@ -93,37 +101,102 @@ class VerdictEngine:
         key = (int(agg), int(measure) if agg == AVG else 0)
         if key not in self.synopses:
             self.synopses[key] = Synopsis(
-                self.schema, capacity=self.config.capacity, delta_v=self.config.delta_v
+                self.schema,
+                capacity=self.config.capacity,
+                delta_v=self.config.delta_v,
+                async_ingest=self.config.async_ingest,
             )
         return self.synopses[key]
 
+    def drain(self):
+        """Barrier over every synopsis' async ingest queue.
+
+        Call at snapshot/refit boundaries; serving itself drains lazily (each
+        ``improve`` waits only for its own synopsis' pending batches).
+        """
+        for syn in self.synopses.values():
+            syn.drain()
+
     def refit(self, steps: int = 150, lr: float = 0.1, learn_sigma: bool = False):
-        """Offline learning pass (paper Algorithm 1)."""
+        """Offline learning pass (paper Algorithm 1). Drains async ingest."""
         for syn in self.synopses.values():
             syn.refit(steps=steps, lr=lr, learn_sigma=learn_sigma)
 
     # ------------------------------------------------------------ improve
-    def _improve(self, snippets: SnippetBatch, raw: RawAnswer) -> ImprovedAnswer:
-        """Per-aggregate-function improvement, scattered back to query order."""
+    def _group_rows(self, snippets: SnippetBatch):
+        """(key, row-index array) per aggregate-function group, in key order."""
         agg = np.asarray(snippets.agg)
         mea = np.asarray(snippets.measure)
-        theta = np.array(np.asarray(raw.theta))
-        beta2 = np.array(np.asarray(raw.beta2))
-        out_theta = theta.copy()
-        out_beta2 = beta2.copy()
-        accepted = np.zeros(len(agg), dtype=bool)
-        for key in {(int(a), int(m) if a == AVG else 0) for a, m in zip(agg, mea)}:
+        keys = sorted({(int(a), int(m) if a == AVG else 0)
+                       for a, m in zip(agg, mea)})
+        out = []
+        for key in keys:
             rows = np.where(
                 (agg == key[0]) & ((mea == key[1]) if key[0] == AVG else True)
             )[0]
+            out.append((key, rows))
+        return out
+
+    def _improve(self, snippets: SnippetBatch, raw: RawAnswer) -> ImprovedAnswer:
+        """Per-aggregate-function improvement, scattered back to query order.
+
+        The per-key Python loop is fused into ONE stacked jitted dispatch:
+        every group's (state, new-snippets, raw answers) is padded to a shared
+        (Q-bucket, fill-bucket) tile and improved by a single vmapped program
+        (bitwise equal per group to the single-synopsis path). With
+        ``use_kernels=True`` each group instead routes through the
+        ``gp_batch_infer`` Pallas kernel, whose 128-wide MXU tiling is the
+        TPU-side equivalent of the stacking.
+        """
+        theta = np.asarray(raw.theta)
+        beta2 = np.asarray(raw.beta2)
+        out_theta = np.array(theta)
+        out_beta2 = np.array(beta2)
+        accepted = np.zeros(theta.shape[0], dtype=bool)
+        groups = []
+        for key, rows in self._group_rows(snippets):
             syn = self.synopsis_for(*key)
-            sub = snippets[jnp.asarray(rows)]
-            imp = syn.improve(
-                sub, RawAnswer(jnp.asarray(theta[rows]), jnp.asarray(beta2[rows]))
+            syn.drain()
+            if syn.n == 0:
+                continue  # Theorem 1 equality case: raw passes through
+            groups.append((syn, rows))
+        if groups and (self.config.use_kernels or len(groups) == 1):
+            for syn, rows in groups:
+                sub = snippets[jnp.asarray(rows)]
+                imp = syn.improve(
+                    sub,
+                    RawAnswer(jnp.asarray(theta[rows]), jnp.asarray(beta2[rows])),
+                    use_kernel=self.config.use_kernels,
+                )
+                out_theta[rows] = np.asarray(imp.theta)
+                out_beta2[rows] = np.asarray(imp.beta2)
+                accepted[rows] = np.asarray(imp.accepted)
+        elif groups:
+            qb = bucket_size(max(len(rows) for _, rows in groups), MIN_Q_BUCKET)
+            fb = max(syn._fill_bucket() for syn, _ in groups)
+            states = [syn._padded_state(fb) for syn, _ in groups]
+            news, raw_ts, raw_bs = [], [], []
+            for syn, rows in groups:
+                news.append(pad_snippets(snippets[jnp.asarray(rows)], qb))
+                raw_ts.append(_pad_raw(jnp.asarray(theta[rows]), qb, 0.0))
+                raw_bs.append(_pad_raw(jnp.asarray(beta2[rows]), qb, 1.0))
+            stack = lambda *xs: jnp.stack(xs)  # noqa: E731
+            th_s, b2_s, acc_s = _improve_stacked(
+                jax.tree.map(stack, *[s[0] for s in states]),
+                jnp.stack([s[1] for s in states]),
+                jnp.stack([s[2] for s in states]),
+                jnp.stack([s[3] for s in states]),
+                jax.tree.map(stack, *[syn.params for syn, _ in groups]),
+                jax.tree.map(stack, *news),
+                jnp.stack(raw_ts),
+                jnp.stack(raw_bs),
+                groups[0][0].delta_v,
             )
-            out_theta[rows] = np.asarray(imp.theta)
-            out_beta2[rows] = np.asarray(imp.beta2)
-            accepted[rows] = np.asarray(imp.accepted)
+            for g, (syn, rows) in enumerate(groups):
+                k = len(rows)
+                out_theta[rows] = np.asarray(th_s[g, :k])
+                out_beta2[rows] = np.asarray(b2_s[g, :k])
+                accepted[rows] = np.asarray(acc_s[g, :k])
         return ImprovedAnswer(
             theta=jnp.asarray(out_theta),
             beta2=jnp.asarray(out_beta2),
@@ -133,32 +206,65 @@ class VerdictEngine:
         )
 
     def _record(self, snippets: SnippetBatch, raw: RawAnswer):
-        agg = np.asarray(snippets.agg)
-        mea = np.asarray(snippets.measure)
-        for key in {(int(a), int(m) if a == AVG else 0) for a, m in zip(agg, mea)}:
-            rows = np.where(
-                (agg == key[0]) & ((mea == key[1]) if key[0] == AVG else True)
-            )[0]
+        """Enqueue the final raw answers for learning (async per synopsis)."""
+        theta = np.asarray(raw.theta)
+        beta2 = np.asarray(raw.beta2)
+        for key, rows in self._group_rows(snippets):
             syn = self.synopsis_for(*key)
             sub = snippets[jnp.asarray(rows)]
-            syn.add(sub, np.asarray(raw.theta)[rows], np.asarray(raw.beta2)[rows])
+            syn.add(sub, theta[rows], beta2[rows])
 
     # ------------------------------------------------------------- groups
     def _discover_groups(self, q: Q.AggQuery):
-        if not q.groupby:
-            return ((),)
-        first = self.batches.relation.take(self.batches.batch_rows[0])
-        plan_probe = Q.decompose(self.schema, Q.AggQuery(aggs=(Q.AggSpec("COUNT"),), predicates=q.predicates))
+        return self._discover_groups_many([q])[0]
+
+    def _discover_groups_many(self, queries: Sequence[Q.AggQuery]):
+        """Group-by value discovery for a whole workload in ONE probe.
+
+        Every query's COUNT-probe snippets are fused into a single padded
+        batch and evaluated with one ``predicate_mask`` pass over the first
+        sample batch, instead of one eval (and one ``relation.take``) per
+        query. Mask columns are computed independently per snippet, so the
+        per-query booleans — and hence the discovered groups — are identical
+        to the one-probe-at-a-time path.
+        """
+        out: List[Optional[tuple]] = [None] * len(queries)
+        need = []
+        for i, q in enumerate(queries):
+            if not q.groupby:
+                out[i] = ((),)
+            else:
+                need.append(i)
+        if not need:
+            return out
         from repro.aqp.executor import predicate_mask
 
-        mask = np.asarray(
-            predicate_mask(first.num_normalized, first.cat, plan_probe.snippets)
-        )[:, 0].astype(bool)
-        cats = np.asarray(first.cat)[mask][:, list(q.groupby)]
-        if cats.size == 0:
-            return ((),) if not q.groupby else tuple()
-        uniq = np.unique(cats, axis=0)
-        return tuple(tuple(int(v) for v in row) for row in uniq)
+        first = self.batches.relation.take(self.batches.batch_rows[0])
+        plans = [
+            Q.decompose(
+                self.schema,
+                Q.AggQuery(aggs=(Q.AggSpec("COUNT"),),
+                           predicates=queries[i].predicates),
+            )
+            for i in need
+        ]
+        fused = SnippetBatch.concat([p.snippets for p in plans])
+        mask_all = np.asarray(
+            predicate_mask(first.num_normalized, first.cat, pad_snippets(fused))
+        ).astype(bool)
+        cat_first = np.asarray(first.cat)
+        off = 0
+        for i, plan in zip(need, plans):
+            q = queries[i]
+            mask = mask_all[:, off]
+            off += plan.snippets.n
+            cats = cat_first[mask][:, list(q.groupby)]
+            if cats.size == 0:
+                out[i] = tuple()
+                continue
+            uniq = np.unique(cats, axis=0)
+            out[i] = tuple(tuple(int(v) for v in row) for row in uniq)
+        return out
 
     # ------------------------------------------------------------- execute
     def execute(
@@ -253,6 +359,40 @@ class VerdictEngine:
         )
         return Q.AggQuery(aggs=supported_aggs, predicates=clean_preds,
                           groupby=q.groupby)
+
+    # -------------------------------------------------------------- persist
+    def synopses_state_dict(self) -> Dict[str, dict]:
+        """Host snapshot of every synopsis, keyed ``"<agg>_<measure>"``.
+
+        Drains async ingest first (via ``Synopsis.state_dict``) and returns
+        copies, so the snapshot is stable across later queries — the pytree
+        ``repro.ft.checkpoint`` persists across process restarts.
+        """
+        return {
+            f"{agg}_{mea}": self.synopses[(agg, mea)].state_dict()
+            for (agg, mea) in sorted(self.synopses)
+        }
+
+    def load_synopses_state_dict(self, state: Dict[str, dict]):
+        """Restore synopses saved by ``synopses_state_dict`` (rebuilds models)."""
+        for key, sd in state.items():
+            agg, mea = (int(x) for x in key.split("_"))
+            self.synopsis_for(agg, mea).load_state_dict(sd)
+
+    def save_synopses(self, manager, step: int):
+        """Checkpoint the learned synopses through a ``CheckpointManager``."""
+        manager.save(step, self.synopses_state_dict(),
+                     extra={"kind": "verdict-synopses"})
+
+    def load_synopses(self, manager, step: Optional[int] = None):
+        """Restore synopses from a ``CheckpointManager`` checkpoint.
+
+        This is what makes the engine smarter across process restarts: a new
+        process pays zero queries to recover everything past sessions learned.
+        """
+        state, extra = manager.restore_blind(step)
+        self.load_synopses_state_dict(state)
+        return extra
 
     # -------------------------------------------------------------- batched
     def execute_many(

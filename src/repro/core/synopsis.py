@@ -2,16 +2,34 @@
 
 Paper §2.3: per aggregate function g the synopsis retains at most C_g snippets
 (LRU replacement). The covariance matrix Sigma_n (raw-answer covariances) and
-its inverse are maintained *incrementally* in O(n^2) per insert/evict using the
-block matrix-inversion lemma — the same identity the paper's Theorem 1 proof
-uses — with a periodic full refactor to bound numerical drift.
+its inverse are maintained *incrementally* in O(n^2 k) per blocked insert/evict
+using the block matrix-inversion lemma — the same identity the paper's
+Theorem 1 proof uses — with a periodic full refactor to bound numerical drift.
 
-The serving path (``improve``) runs against device-resident buffers padded to
-capacity, so one jitted program serves every synopsis fill level.
+Serving (``improve``) runs against device-resident buffers padded to
+**fill-level buckets** (powers of two, clamped to capacity) rather than to
+capacity: one compiled program per bucket, and inference cost scales with the
+actual synopsis fill instead of C_g^2. The new-snippet axis Q is bucketed the
+same way, so a mixed-Q workload compiles one program per (Q-bucket,
+fill-bucket) pair. Power-of-two buckets are mutually bitwise-consistent on the
+XLA CPU/TPU dot paths (padding columns carry k=0 / Sigma^{-1}=I / alpha=0 and
+contribute exact zeros), which is what the padding-invariance parity tests
+pin down.
+
+Learning never blocks serving: ``add`` snapshots the raw answers to host
+memory and enqueues them on a background ingest thread (``_IngestQueue``)
+which runs the covariance builds and blocked inverse updates off the critical
+path. ``drain()`` is the explicit barrier; every reader of model state
+(``improve``, ``state_dict``, ``refit``…) drains first, so the post-drain
+state is bitwise identical to synchronous ingestion regardless of thread
+timing — async ingest is deterministic by construction.
 """
 from __future__ import annotations
 
-import dataclasses
+import atexit
+import collections
+import threading
+import weakref
 from typing import Optional
 
 import jax
@@ -26,6 +44,7 @@ from repro.core.types import (
     RawAnswer,
     Schema,
     SnippetBatch,
+    bucket_size,
     pad_snippets,
     snippet_key,
 )
@@ -33,37 +52,17 @@ from repro.core.types import (
 REFACTOR_EVERY = 128  # full O(n^3) rebuild cadence (numerical hygiene)
 JITTER = 1e-10
 
-
-def inv_append_row(ainv, col, diag, jitter=JITTER):
-    """O(n^2) inverse update appending one row/col (matrix inversion lemma)."""
-    u = ainv @ col
-    s = jnp.maximum(diag + jitter - col @ u, jitter)
-    n = ainv.shape[0]
-    out = jnp.zeros((n + 1, n + 1), ainv.dtype)
-    out = out.at[:n, :n].set(ainv + jnp.outer(u, u) / s)
-    out = out.at[:n, n].set(-u / s)
-    out = out.at[n, :n].set(-u / s)
-    out = out.at[n, n].set(1.0 / s)
-    return out
-
-
-def inv_delete_row(ainv, r):
-    """O(n^2) inverse update deleting row/col r."""
-    n = ainv.shape[0]
-    keep = np.r_[0:r, r + 1 : n]
-    a = ainv[np.ix_(keep, keep)]
-    b = ainv[keep, r]
-    d = ainv[r, r]
-    return a - jnp.outer(b, b) / d
+# Smallest serve-path tiles: fills/batches below these share one program.
+MIN_FILL_BUCKET = 8
+MIN_Q_BUCKET = 8
 
 
 def inv_append_block(ainv, cols, block, jitter=JITTER):
     """O(m^2 k + k^3) inverse update appending k rows/cols at once.
 
-    Blocked matrix-inversion lemma (the rank-k generalization of
-    ``inv_append_row``): given A^{-1} for the current (m, m) covariance, the
-    inverse of [[A, Bᵀ], [B, D]] is assembled from the Schur complement
-    S = D - B A^{-1} Bᵀ.
+    Blocked matrix-inversion lemma (rank-k): given A^{-1} for the current
+    (m, m) covariance, the inverse of [[A, Bᵀ], [B, D]] is assembled from the
+    Schur complement S = D - B A^{-1} Bᵀ.
 
     cols:  (k, m) covariance of the new rows against the existing ones (B).
     block: (k, k) covariance among the new rows, noise included on the
@@ -74,9 +73,9 @@ def inv_append_block(ainv, cols, block, jitter=JITTER):
     u = cols @ ainv  # (k, m) = B A^{-1}
     s = block - u @ cols.T  # Schur complement
     s = 0.5 * (s + s.T)
-    # Clamp to PSD via eigenvalues — the rank-k generalization of
-    # inv_append_row's max(s, jitter): near-duplicate snippets can make S
-    # numerically indefinite, and jnp's Cholesky would silently emit NaNs.
+    # Clamp to PSD via eigenvalues — the rank-k generalization of the scalar
+    # max(s, jitter): near-duplicate snippets can make S numerically
+    # indefinite, and jnp's Cholesky would silently emit NaNs.
     w, v = jnp.linalg.eigh(s)
     w = jnp.maximum(w + jitter, jitter)
     sinv = (v / w) @ v.T
@@ -105,8 +104,15 @@ def inv_delete_block(ainv, positions):
     return a - b @ jnp.linalg.solve(d, b.T)
 
 
-@jax.jit
-def _improve_padded(
+def _improve_inputs(past: SnippetBatch, valid, params: GPParams, new: SnippetBatch):
+    """Covariance inputs of the improve step: (k_mat, kappa2, mu_new)."""
+    k_mat = covariance.cov_matrix(new, past, params) * valid[None, :]
+    kappa2 = covariance.cov_diag(new, params)
+    mu_new = covariance.prior_mean(new, params)
+    return k_mat, kappa2, mu_new
+
+
+def _improve_core(
     past: SnippetBatch,
     valid,
     sigma_inv,
@@ -117,9 +123,8 @@ def _improve_padded(
     raw_beta2,
     delta_v,
 ):
-    k_mat = covariance.cov_matrix(new, past, params) * valid[None, :]
-    kappa2 = covariance.cov_diag(new, params)
-    mu_new = covariance.prior_mean(new, params)
+    """Improve Q new snippets against one padded synopsis state (Eq. 11/12 + App. B)."""
+    k_mat, kappa2, mu_new = _improve_inputs(past, valid, params, new)
     model_theta, model_beta2, gamma2 = inference.model_based_answer(
         k_mat, kappa2, sigma_inv, alpha, mu_new, raw_theta, raw_beta2
     )
@@ -127,6 +132,113 @@ def _improve_padded(
         new.agg, model_theta, model_beta2, raw_theta, raw_beta2, delta_v
     )
     return theta, beta2, accepted
+
+
+# One compiled program per (Q-bucket, fill-bucket) shape pair.
+_improve_padded = jax.jit(_improve_core)
+# Stacked variant: one dispatch improves G aggregate-function groups at once
+# (leading axis over synopses). Bitwise equal per slice to the single-group
+# program — batched dots reduce in the same order as unbatched ones.
+_improve_stacked = jax.jit(
+    jax.vmap(_improve_core, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None))
+)
+_improve_inputs_jit = jax.jit(_improve_inputs)
+
+
+def _pad_raw(x, target: int, fill: float):
+    """Pad a 1-D raw-answer vector up to the Q bucket (host-side, f64)."""
+    x = jnp.asarray(x)
+    k = target - x.shape[0]
+    if k <= 0:
+        return x
+    return jnp.concatenate([x, jnp.full((k,), fill, x.dtype)])
+
+
+# Ingest threads must be quiescent when the interpreter tears down: a worker
+# still inside an XLA dispatch at exit aborts the C++ runtime. atexit runs
+# before teardown, so draining here leaves the daemon threads parked in plain
+# condition waits.
+_LIVE_QUEUES: "weakref.WeakSet" = weakref.WeakSet()
+
+
+@atexit.register
+def _drain_live_queues():
+    for q in list(_LIVE_QUEUES):
+        try:
+            q.drain()
+        except Exception:
+            pass
+
+
+class _IngestQueue:
+    """Background applier for ``Synopsis.add`` batches.
+
+    Batches are applied strictly in submission order, one at a time, so the
+    post-``drain()`` state is bitwise identical to synchronous ingestion no
+    matter how worker progress interleaves with serving. Wakeups coalesce:
+    one lock round hands the worker every batch queued since the last one.
+    The worker thread is daemonic, starts lazily, and exits after an idle
+    period (``submit`` restarts it on demand).
+
+    A failed apply POISONS the queue: the partial mutation cannot be rolled
+    back, so later batches are discarded unapplied and every subsequent
+    ``drain()`` re-raises — the synopsis never silently serves (or
+    checkpoints) a model built on a half-applied batch.
+    """
+
+    IDLE_TIMEOUT = 5.0
+
+    def __init__(self, apply_fn):
+        self._apply = apply_fn
+        self._pending: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._outstanding = 0
+        self._thread: Optional[threading.Thread] = None
+        self._exc: Optional[BaseException] = None
+        _LIVE_QUEUES.add(self)
+
+    def submit(self, item):
+        with self._cv:
+            self._pending.append(item)
+            self._outstanding += 1
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._run, name="synopsis-ingest", daemon=True
+                )
+                self._thread.start()
+            self._cv.notify_all()
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._pending:
+                    woke = self._cv.wait(timeout=self.IDLE_TIMEOUT)
+                    if not woke and not self._pending:
+                        self._thread = None  # idle exit; submit() restarts
+                        return
+                batch = list(self._pending)
+                self._pending.clear()
+            for item in batch:
+                with self._cv:
+                    poisoned = self._exc is not None
+                if not poisoned:
+                    try:
+                        self._apply(*item)
+                    except BaseException as e:  # noqa: BLE001 — poisons queue
+                        with self._cv:
+                            if self._exc is None:
+                                self._exc = e
+                with self._cv:
+                    self._outstanding -= 1
+                    self._cv.notify_all()
+
+    def drain(self):
+        with self._cv:
+            while self._outstanding:
+                self._cv.wait()
+            exc = self._exc  # kept: a poisoned queue re-raises on every drain
+        if exc is not None:
+            raise RuntimeError("async synopsis ingest failed") from exc
 
 
 class Synopsis:
@@ -138,10 +250,12 @@ class Synopsis:
         capacity: int = 2000,
         delta_v: float = 0.99,
         params: Optional[GPParams] = None,
+        async_ingest: bool = True,
     ):
         self.schema = schema
         self.capacity = int(capacity)
         self.delta_v = float(delta_v)
+        self.async_ingest = bool(async_ingest)
         l, c, v = schema.n_num, schema.n_cat, max(schema.cat_vmax, 1)
         C = self.capacity
         self._lo = np.zeros((C, l))
@@ -161,7 +275,8 @@ class Synopsis:
         self._alpha = jnp.zeros((0,))
         self._updates_since_refactor = 0
         self._order: list = []  # row ids in Sigma^{-1} ordering
-        self._device_state = None  # padded buffers for the jitted serve path
+        self._device_states: dict = {}  # fill bucket -> padded serve buffers
+        self._ingest: Optional[_IngestQueue] = None
 
     # ---------------------------------------------------------------- storage
     def _row_batch(self, rows) -> SnippetBatch:
@@ -174,38 +289,66 @@ class Synopsis:
         )
 
     def active(self) -> SnippetBatch:
+        self.drain()
         return self._row_batch(np.arange(self.n))
 
     def theta(self):
+        self.drain()
         return jnp.asarray(self._theta[: self.n])
 
     def beta2(self):
+        self.drain()
         return jnp.asarray(self._beta2[: self.n])
 
     @staticmethod
     def _key(lo, hi, cat, agg, measure):
         return snippet_key(lo, hi, cat, agg, measure)
 
-    # ----------------------------------------------------------------- insert
+    # ----------------------------------------------------------------- ingest
     def add(self, snippets: SnippetBatch, theta, beta2):
         """Insert raw answers; duplicates refresh LRU stamps and keep the more
         accurate answer.
 
-        Vectorized ingest: covariance columns for every genuinely-new row are
-        built in one ``cov_matrix_jit`` call and applied with one blocked
-        rank-k inverse update (``inv_append_block``); capacity evictions for
-        the whole batch are applied with one blocked delete. Dedup/LRU
-        semantics match the historical per-snippet path, except that eviction
-        victims are chosen after the whole incoming batch has refreshed its
-        duplicate stamps.
+        The host snapshot happens here (cheap copies); the covariance builds
+        and blocked inverse updates run on the background ingest thread so
+        callers return as soon as the answers are enqueued. ``drain()`` is
+        the barrier; batches apply strictly in FIFO order, so the post-drain
+        state is bitwise identical to synchronous ingestion
+        (``async_ingest=False`` applies inline instead).
         """
-        lo = np.asarray(snippets.lo)
-        hi = np.asarray(snippets.hi)
-        cat = np.asarray(snippets.cat)
-        agg = np.asarray(snippets.agg)
-        mea = np.asarray(snippets.measure)
-        theta = np.asarray(theta)
-        beta2 = np.asarray(beta2)
+        item = (
+            np.array(np.asarray(snippets.lo), dtype=np.float64),
+            np.array(np.asarray(snippets.hi), dtype=np.float64),
+            np.array(np.asarray(snippets.cat), dtype=bool),
+            np.array(np.asarray(snippets.agg), dtype=np.int32),
+            np.array(np.asarray(snippets.measure), dtype=np.int32),
+            np.array(np.asarray(theta), dtype=np.float64),
+            np.array(np.asarray(beta2), dtype=np.float64),
+        )
+        if not self.async_ingest:
+            self._apply_add(*item)
+            return
+        if self._ingest is None:
+            self._ingest = _IngestQueue(self._apply_add)
+        self._ingest.submit(item)
+
+    def drain(self):
+        """Barrier: block until every enqueued ``add`` batch has been applied
+        (and re-raise any ingest failure). Idempotent and cheap when idle."""
+        if self._ingest is not None:
+            self._ingest.drain()
+
+    def _apply_add(self, lo, hi, cat, agg, mea, theta, beta2):
+        """Synchronous ingest of one host-side batch (runs on the worker).
+
+        Vectorized: covariance columns for every genuinely-new row are built
+        in one ``cov_matrix_jit`` call and applied with one blocked rank-k
+        inverse update (``inv_append_block``); capacity evictions for the
+        whole batch are applied with one blocked delete. Dedup/LRU semantics
+        match the historical per-snippet path, except that eviction victims
+        are chosen after the whole incoming batch has refreshed its duplicate
+        stamps.
+        """
         pending: dict = {}  # key -> [incoming index of best beta2, LRU stamp]
         for i in range(lo.shape[0]):
             if not (np.isfinite(theta[i]) and np.isfinite(beta2[i])):
@@ -261,11 +404,11 @@ class Synopsis:
                 self._keys[key] = r
             self._insert_block_into_model(slots)
         self._refresh_alpha()
-        self._device_state = None
+        self._device_states.clear()
 
     def _replace_beta(self, r, new_beta2):
         """Diagonal-only change: redo row r in the model (delete+insert)."""
-        self._delete_from_model(r)
+        self._delete_block_from_model([r])
         self._beta2[r] = new_beta2
         self._insert_block_into_model([r])
 
@@ -318,12 +461,6 @@ class Synopsis:
             self._sigma_inv, jnp.asarray(cols), jnp.asarray(block)
         )
 
-    def _insert_into_model(self, r):
-        self._insert_block_into_model([r])
-
-    def _delete_from_model(self, r):
-        self._delete_block_from_model([r])
-
     def _delete_block_from_model(self, rows):
         members = set(self._order)
         rows = [int(r) for r in rows if int(r) in members]
@@ -348,7 +485,7 @@ class Synopsis:
         self._updates_since_refactor = 0
 
     def _refresh_alpha(self):
-        rows = np.asarray(getattr(self, "_order", []), dtype=np.int64)
+        rows = np.asarray(self._order, dtype=np.int64)
         if len(rows) == 0:
             self._alpha = jnp.zeros((0,))
             return
@@ -359,6 +496,7 @@ class Synopsis:
     # ------------------------------------------------------------------ refit
     def refit(self, steps: int = 150, lr: float = 0.1, learn_sigma: bool = False):
         """Offline learning (Appendix A): relearn params, rebuild the model."""
+        self.drain()
         if self.n < 3:
             return self.params
         rows = np.asarray(self._order, dtype=np.int64)
@@ -373,7 +511,8 @@ class Synopsis:
 
     def rebuild(self):
         """Recompute Sigma for the current params, refactor, refresh alpha."""
-        rows = np.asarray(getattr(self, "_order", []), dtype=np.int64)
+        self.drain()
+        rows = np.asarray(self._order, dtype=np.int64)
         if len(rows):
             batch = self._row_batch(rows)
             sig = np.array(covariance.cov_matrix_jit(batch, batch, self.params))
@@ -383,45 +522,89 @@ class Synopsis:
             self._sigma[np.ix_(rows, rows)] = sig
         self._refactor()
         self._refresh_alpha()
-        self._device_state = None
+        self._device_states.clear()
 
     # ------------------------------------------------------------------ serve
-    def _padded_state(self):
-        """Device-resident buffers padded to capacity for the jitted hot path."""
-        if self._device_state is not None:
-            return self._device_state
-        C = self.capacity
-        rows = np.asarray(getattr(self, "_order", []), dtype=np.int64)
+    def _fill_bucket(self) -> int:
+        """Power-of-two serve tile covering the current fill (<= capacity)."""
+        return bucket_size(self.n, MIN_FILL_BUCKET, cap=self.capacity)
+
+    def _padded_state(self, bucket: Optional[int] = None):
+        """Device-resident buffers padded to a fill bucket, cached per bucket.
+
+        Padding rows carry k = 0 (valid mask), Sigma^{-1} = I and alpha = 0,
+        leaving every product untouched; the jitted serve path therefore
+        compiles one program per bucket and its cost scales with fill, not
+        capacity. Callers may request a larger bucket than the current fill
+        (the stacked multi-synopsis dispatch aligns groups on one bucket).
+        """
+        bucket = self._fill_bucket() if bucket is None else int(bucket)
+        state = self._device_states.get(bucket)
+        if state is not None:
+            return state
+        rows = np.asarray(self._order, dtype=np.int64)
         n = len(rows)
-        idx = np.concatenate([rows, np.zeros((C - n,), np.int64)])
+        idx = np.concatenate([rows, np.zeros((bucket - n,), np.int64)])
         past = self._row_batch(idx)
-        valid = jnp.asarray(np.arange(C) < n, jnp.float64)
-        sinv = np.eye(C)
+        valid = jnp.asarray(np.arange(bucket) < n, jnp.float64)
+        sinv = np.eye(bucket)
         if n:
             sinv[:n, :n] = np.asarray(self._sigma_inv)
-        alpha = np.zeros((C,))
+        alpha = np.zeros((bucket,))
         alpha[:n] = np.asarray(self._alpha)
-        self._device_state = (past, valid, jnp.asarray(sinv), jnp.asarray(alpha))
-        return self._device_state
+        state = (past, valid, jnp.asarray(sinv), jnp.asarray(alpha))
+        self._device_states[bucket] = state
+        return state
 
-    def improve(self, new: SnippetBatch, raw: RawAnswer) -> ImprovedAnswer:
-        """Improved answers for a batch of new snippets (Algorithm 2 lines 3-7)."""
+    def improve(self, new: SnippetBatch, raw: RawAnswer,
+                use_kernel: bool = False) -> ImprovedAnswer:
+        """Improved answers for a batch of new snippets (Algorithm 2 lines 3-7).
+
+        Drains pending ingest first (the model the paper conditions on is the
+        one containing every recorded answer), then serves from the bucketed
+        device state. ``use_kernel=True`` routes the fused inference through
+        the ``gp_batch_infer`` Pallas kernel (f32 MXU path) instead of the
+        jnp f64 program; validation (Appendix B) applies either way.
+        """
+        self.drain()
         if self.n == 0:
             # Empty synopsis: Theorem 1's equality case — return raw unchanged.
             acc = jnp.zeros((new.n,), bool)
             return ImprovedAnswer(raw.theta, raw.beta2, raw.theta, raw.beta2, acc)
+        q = new.n
+        qb = bucket_size(q, MIN_Q_BUCKET)
+        padded_new = pad_snippets(new, qb)
+        raw_theta = _pad_raw(raw.theta, qb, 0.0)
+        raw_beta2 = _pad_raw(raw.beta2, qb, 1.0)
         past, valid, sinv, alpha = self._padded_state()
-        theta, beta2, accepted = _improve_padded(
-            past, valid, sinv, alpha, self.params, new, raw.theta, raw.beta2,
-            self.delta_v,
+        if use_kernel:
+            from repro.kernels.gp_batch_infer import ops as gp_ops
+
+            k_mat, kappa2, mu_new = _improve_inputs_jit(
+                past, valid, self.params, padded_new
+            )
+            m_theta, m_beta2, _ = gp_ops.gp_batch_infer(
+                k_mat, sinv, alpha, kappa2, mu_new, raw_theta, raw_beta2
+            )
+            theta, beta2, accepted = validation.validate(
+                padded_new.agg, m_theta, m_beta2, raw_theta, raw_beta2,
+                self.delta_v,
+            )
+        else:
+            theta, beta2, accepted = _improve_padded(
+                past, valid, sinv, alpha, self.params, padded_new,
+                raw_theta, raw_beta2, self.delta_v,
+            )
+        return ImprovedAnswer(
+            theta[:q], beta2[:q], raw.theta, raw.beta2, accepted[:q]
         )
-        return ImprovedAnswer(theta, beta2, raw.theta, raw.beta2, accepted)
 
     # ------------------------------------------------------------- append (D)
     def apply_append(self, stats):
         """Adjust all stored answers for appended data (Appendix D, Lemma 3)."""
         from repro.core.append import adjust_answers
 
+        self.drain()
         if self.n == 0:
             return
         rows = np.arange(self.n)
@@ -438,22 +621,31 @@ class Synopsis:
 
     # ------------------------------------------------------------ persistence
     def state_dict(self):
+        """Host snapshot of the learned state (drains pending ingest first).
+
+        Every array is a copy — never a live view into the ring buffers — so
+        snapshots stay valid across later ``add`` calls (checkpointing relies
+        on this).
+        """
+        self.drain()
+        n = self.n
         return {
-            "lo": self._lo[: self.n],
-            "hi": self._hi[: self.n],
-            "cat": self._cat[: self.n],
-            "agg": self._agg[: self.n],
-            "measure": self._measure[: self.n],
-            "theta": self._theta[: self.n],
-            "beta2": self._beta2[: self.n],
-            "stamp": self._stamp[: self.n],
-            "order": np.asarray(getattr(self, "_order", []), np.int64),
-            "log_ls": np.asarray(self.params.log_ls),
-            "log_sigma2": np.asarray(self.params.log_sigma2),
-            "mu": np.asarray(self.params.mu),
+            "lo": np.array(self._lo[:n]),
+            "hi": np.array(self._hi[:n]),
+            "cat": np.array(self._cat[:n]),
+            "agg": np.array(self._agg[:n]),
+            "measure": np.array(self._measure[:n]),
+            "theta": np.array(self._theta[:n]),
+            "beta2": np.array(self._beta2[:n]),
+            "stamp": np.array(self._stamp[:n]),
+            "order": np.asarray(self._order, np.int64),
+            "log_ls": np.array(np.asarray(self.params.log_ls)),
+            "log_sigma2": np.array(np.asarray(self.params.log_sigma2)),
+            "mu": np.array(np.asarray(self.params.mu)),
         }
 
     def load_state_dict(self, state):
+        self.drain()
         n = state["lo"].shape[0]
         self.n = n
         self._lo[:n] = state["lo"]

@@ -20,7 +20,7 @@ import jax
 jax.config.update("jax_enable_x64", True)
 
 import dataclasses  # noqa: E402
-from typing import Tuple  # noqa: E402
+from typing import Optional, Tuple  # noqa: E402
 
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
@@ -125,6 +125,24 @@ class SnippetBatch:
 
 
 SNIPPET_TILE = 128
+
+
+def bucket_size(n: int, minimum: int = 8, cap: Optional[int] = None) -> int:
+    """Smallest power-of-two tile >= max(n, minimum), optionally clamped to cap.
+
+    The shape-bucketing rule shared by the serve path: padding device buffers
+    to the next power of two (instead of a fixed capacity) keeps the number of
+    compiled programs logarithmic in the largest size seen while letting cost
+    scale with actual fill. ``cap`` (the synopsis capacity) bounds the largest
+    bucket; since n <= cap always, the clamped bucket still covers n.
+    """
+    b = max(int(minimum), 1)
+    n = int(n)
+    while b < n:
+        b *= 2
+    if cap is not None:
+        b = min(b, int(cap))
+    return b
 
 
 def snippet_key(lo, hi, cat, agg, measure) -> int:

@@ -107,14 +107,7 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, target: Any, step: Optional[int] = None,
-                shardings: Any = None):
-        """Restore into the structure of ``target``; returns (tree, extra).
-
-        ``shardings``: optional tree of NamedShardings (defaults to the
-        target leaves' shardings when they are jax Arrays) — re-sharding onto
-        a different mesh happens here via device_put.
-        """
+    def _read_step(self, step: Optional[int]):
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
@@ -125,6 +118,36 @@ class CheckpointManager:
             with np.load(os.path.join(path, f"shard_{p}.npz")) as z:
                 for k in z.files:
                     data[k] = z[k]
+        return data, manifest
+
+    def restore_blind(self, step: Optional[int] = None):
+        """Restore without a target pytree: nested dicts straight from the
+        manifest key paths, leaves as host numpy arrays.
+
+        This is how structure-bearing state whose shapes are unknown before
+        restore comes back — e.g. the Verdict synopsis snapshots
+        (``VerdictEngine.load_synopses``), whose per-synopsis row counts are
+        a property of what past sessions learned. Returns (tree, extra).
+        """
+        data, manifest = self._read_step(step)
+        tree: dict = {}
+        for key, arr in data.items():
+            node = tree
+            parts = key.split(_SEP)
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = arr
+        return tree, manifest["extra"]
+
+    def restore(self, target: Any, step: Optional[int] = None,
+                shardings: Any = None):
+        """Restore into the structure of ``target``; returns (tree, extra).
+
+        ``shardings``: optional tree of NamedShardings (defaults to the
+        target leaves' shardings when they are jax Arrays) — re-sharding onto
+        a different mesh happens here via device_put.
+        """
+        data, manifest = self._read_step(step)
         flat_t, treedef = _flatten(target)
         missing = set(flat_t) - set(data)
         if missing:

@@ -82,3 +82,21 @@ class AqpService:
         tickets = [self.submit(q) for q in queries]
         self.flush()
         return [t.result() for t in tickets]
+
+    def drain(self):
+        """Barrier over the engine's async synopsis ingest.
+
+        Flushes never wait for learning — answers return while covariance
+        builds catch up on the ingest threads. Call this only at snapshot
+        boundaries (checkpointing, refit, shutdown) where the fully-applied
+        learned state is required.
+        """
+        self.engine.drain()
+
+    def refit(self, **kw):
+        """Offline learning boundary: drain pending ingest, then refit."""
+        self.engine.refit(**kw)
+
+    def snapshot(self, manager, step: int):
+        """Checkpoint the learned synopses (drains first; see repro.ft)."""
+        self.engine.save_synopses(manager, step)

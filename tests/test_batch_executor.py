@@ -226,6 +226,44 @@ def test_execute_many_entrypoint_and_learning_improves(relation):
         assert np.all(np.asarray(imp.beta2) <= np.asarray(imp.raw_beta2) + 1e-12)
 
 
+def test_fused_group_discovery_single_probe(relation, workload):
+    """execute_many discovers every query's group-by values with ONE
+    predicate_mask eval over the first sample batch (the sequential path pays
+    one per group-by query), and the discovered groups are identical."""
+    import repro.aqp.executor as X
+
+    gq = [AggQuery(aggs=(AggSpec("AVG", 0), AggSpec("COUNT")),
+                   predicates=(NumRange(0, lo, lo + 4.0),), groupby=(0,))
+          for lo in (1.0, 2.0, 3.0, 4.0)]
+    mixed = workload[:6] + gq
+    eng = VerdictEngine(relation, _cfg())
+    # Warm every jitted shape first so the counted run traces nothing (a
+    # trace would call the patched predicate_mask from inside eval_partials).
+    BatchExecutor(eng).execute_many(mixed)
+    calls = {"n": 0}
+    inner = X.predicate_mask
+
+    def counting(*args, **kw):
+        calls["n"] += 1
+        return inner(*args, **kw)
+
+    X.predicate_mask = counting
+    try:
+        eng2 = VerdictEngine(relation, _cfg())
+        BatchExecutor(eng2).execute_many(mixed)
+        fused_calls = calls["n"]
+        calls["n"] = 0
+        eng3 = VerdictEngine(relation, _cfg())
+        seq_groups = [eng3._discover_groups(q) for q in mixed]
+        seq_calls = calls["n"]
+    finally:
+        X.predicate_mask = inner
+    assert fused_calls == 1
+    assert seq_calls == len(gq)  # one probe per group-by query sequentially
+    # The fused probe finds exactly the groups the per-query probes find.
+    assert eng3._discover_groups_many(mixed) == seq_groups
+
+
 def test_aqp_service_microbatches(relation, workload):
     eng_svc = VerdictEngine(relation, _cfg())
     eng_ref = VerdictEngine(relation, _cfg())

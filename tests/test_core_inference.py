@@ -7,7 +7,7 @@ import pytest
 from repro.core import covariance as C
 from repro.core import inference as I
 from repro.core.types import AVG, FREQ, GPParams, RawAnswer, Schema, make_snippets
-from repro.core.synopsis import Synopsis, inv_append_row, inv_delete_row
+from repro.core.synopsis import Synopsis, inv_append_block, inv_delete_block
 import proptest as pt
 
 
@@ -105,11 +105,12 @@ def test_incremental_inverse_matches_full():
     sig = a @ a.T + 6 * np.eye(6)
     inv = jnp.asarray(np.linalg.inv(sig[:3, :3]))
     for i in range(3, 6):
-        inv = inv_append_row(inv, jnp.asarray(sig[:i, i]), sig[i, i], jitter=0.0)
+        inv = inv_append_block(inv, jnp.asarray(sig[i:i + 1, :i]),
+                               jnp.asarray(sig[i:i + 1, i:i + 1]), jitter=0.0)
     np.testing.assert_allclose(np.asarray(inv), np.linalg.inv(sig), rtol=1e-8)
     # delete row 2
     keep = [0, 1, 3, 4, 5]
-    inv_del = inv_delete_row(inv, 2)
+    inv_del = inv_delete_block(inv, [2])
     np.testing.assert_allclose(
         np.asarray(inv_del), np.linalg.inv(sig[np.ix_(keep, keep)]), rtol=1e-7)
 
@@ -150,14 +151,17 @@ def test_synopsis_lru_eviction_and_duplicates():
     syn = Synopsis(sch, capacity=8)
     b1 = _random_batch(rng, sch, 8)
     syn.add(b1, rng.normal(1, 0.1, 8), np.full(8, 0.02))
+    syn.drain()
     assert syn.n == 8
     # duplicate insert: refreshes stamp, keeps better answer
     syn.add(b1[0], np.asarray([2.0]), np.asarray([0.001]))
+    syn.drain()
     assert syn.n == 8
     assert syn._theta[0] == pytest.approx(2.0)
     # new snippet evicts the LRU one (row 1 now oldest)
     b2 = _random_batch(rng, sch, 1)
     syn.add(b2, np.asarray([1.5]), np.asarray([0.02]))
+    syn.drain()
     assert syn.n == 8
     assert len(syn._order) == 8
 
@@ -169,6 +173,7 @@ def test_synopsis_incremental_matches_rebuild():
     for i in range(3):
         b = _random_batch(rng, sch, 4)
         syn.add(b, rng.normal(1, 0.2, 4), rng.uniform(0.01, 0.05, 4))
+    syn.drain()
     inv_inc = np.asarray(syn._sigma_inv).copy()
     syn.rebuild()
     np.testing.assert_allclose(inv_inc, np.asarray(syn._sigma_inv), rtol=1e-6)

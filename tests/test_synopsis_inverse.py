@@ -1,6 +1,8 @@
 """Property tests for the synopsis' incremental inverse maintenance:
-rank-1 and blocked rank-k append/delete vs ``jnp.linalg.inv``, round-trips,
-and the evict-then-insert ordering ``Synopsis.add`` exercises."""
+blocked rank-k append/delete vs ``jnp.linalg.inv``, round-trips, and the
+evict-then-insert ordering ``Synopsis.add`` exercises (through the async
+ingest queue: every add is followed by a ``drain()`` barrier before state is
+inspected)."""
 import numpy as np
 import jax.numpy as jnp
 
@@ -8,9 +10,7 @@ import proptest as pt
 from repro.core.synopsis import (
     Synopsis,
     inv_append_block,
-    inv_append_row,
     inv_delete_block,
-    inv_delete_row,
 )
 from repro.core.types import AVG, Schema, SnippetBatch, make_snippets
 
@@ -33,16 +33,6 @@ def _grow(rng, spd, k):
     return full, b, d
 
 
-@pt.given(n_cases=8, seed=1, n=pt.choice([1, 4, 9, 17]))
-def test_inv_append_row_matches_direct_inverse(n):
-    rng = np.random.default_rng(n)
-    full, b, d = _grow(rng, _spd(rng, n), 1)
-    got = inv_append_row(jnp.asarray(np.linalg.inv(full[:n, :n])),
-                         jnp.asarray(b[0]), float(d[0, 0]))
-    np.testing.assert_allclose(np.asarray(got), np.linalg.inv(full),
-                               rtol=1e-6, atol=1e-8)
-
-
 @pt.given(n_cases=8, seed=2, n=pt.choice([2, 9, 17]), k=pt.choice([1, 3, 6]))
 def test_inv_append_block_matches_direct_inverse(n, k):
     rng = np.random.default_rng(n * 31 + k)
@@ -53,26 +43,14 @@ def test_inv_append_block_matches_direct_inverse(n, k):
                                rtol=1e-6, atol=1e-8)
 
 
-def test_inv_append_block_k1_equals_append_row():
+def test_inv_append_block_k1_matches_direct_inverse():
+    """The k=1 case (the old per-row path) is just a 1-block append."""
     rng = np.random.default_rng(7)
     n = 9
     full, b, d = _grow(rng, _spd(rng, n), 1)
     ainv = jnp.asarray(np.linalg.inv(full[:n, :n]))
-    row = inv_append_row(ainv, jnp.asarray(b[0]), float(d[0, 0]))
     blk = inv_append_block(ainv, jnp.asarray(b), jnp.asarray(d))
-    np.testing.assert_allclose(np.asarray(blk), np.asarray(row),
-                               rtol=1e-8, atol=1e-10)
-
-
-@pt.given(n_cases=8, seed=3, n=pt.choice([3, 9, 17]))
-def test_inv_delete_row_matches_direct_inverse(n):
-    rng = np.random.default_rng(n + 100)
-    spd = _spd(rng, n)
-    r = int(rng.integers(0, n))
-    keep = np.r_[0:r, r + 1 : n]
-    got = inv_delete_row(jnp.asarray(np.linalg.inv(spd)), r)
-    np.testing.assert_allclose(np.asarray(got),
-                               np.linalg.inv(spd[np.ix_(keep, keep)]),
+    np.testing.assert_allclose(np.asarray(blk), np.linalg.inv(full),
                                rtol=1e-6, atol=1e-8)
 
 
@@ -118,6 +96,7 @@ def _snips(rng, n):
 
 
 def _model_inverse_error(syn):
+    syn.drain()  # async ingest barrier before touching model internals
     rows = np.asarray(syn._order, np.int64)
     sig = syn._sigma[np.ix_(rows, rows)]
     direct = np.linalg.inv(sig + 1e-10 * np.eye(len(rows)))
@@ -138,6 +117,7 @@ def test_synopsis_add_evict_then_insert_keeps_inverse_consistent(
     for s in range(0, total, chunk):
         e = min(s + chunk, total)
         syn.add(snips[jnp.arange(s, e)], theta[s:e], beta2[s:e])
+        syn.drain()
         assert syn.n <= capacity
         assert len(syn._order) == syn.n
         assert _model_inverse_error(syn) < 1e-6
@@ -149,14 +129,17 @@ def test_synopsis_add_dedup_keeps_better_answer_and_refreshes_lru():
     syn = Synopsis(_schema(), capacity=8)
     snips = _snips(rng, 4)
     syn.add(snips, np.full(4, 1.0), np.full(4, 0.1))
+    syn.drain()
     assert syn.n == 4
     # Re-add the same snippets with a worse error: values must not change.
     syn.add(snips, np.full(4, 9.0), np.full(4, 0.5))
+    syn.drain()
     assert syn.n == 4
     np.testing.assert_allclose(syn.theta(), np.full(4, 1.0))
     np.testing.assert_allclose(syn.beta2(), np.full(4, 0.1))
     # Better error: replaced, and the model diagonal follows (delete+insert).
     syn.add(snips[jnp.arange(1)], np.asarray([2.0]), np.asarray([0.01]))
+    syn.drain()
     assert syn.n == 4
     assert float(syn.theta()[0]) == 2.0
     assert float(syn.beta2()[0]) == 0.01
@@ -164,6 +147,7 @@ def test_synopsis_add_dedup_keeps_better_answer_and_refreshes_lru():
     # LRU: rows 1..3 are now stale; filling capacity evicts them first.
     fresh = _snips(np.random.default_rng(1), 7)
     syn.add(fresh, np.full(7, 1.0), np.full(7, 0.1))
+    syn.drain()
     assert syn.n == 8
     remaining = {float(t) for t in syn.theta()}
     assert 2.0 in remaining  # row 0 was refreshed by the better re-add
@@ -176,6 +160,7 @@ def test_synopsis_add_more_new_than_capacity_keeps_most_recent():
     snips = _snips(rng, 12)
     theta = np.arange(12, dtype=float)
     syn.add(snips, theta, np.full(12, 0.1))
+    syn.drain()
     assert syn.n == 5
     # The most recent ``capacity`` snippets survive (LRU semantics).
     assert sorted(float(t) for t in syn.theta()) == [7.0, 8.0, 9.0, 10.0, 11.0]
@@ -191,6 +176,7 @@ def test_synopsis_add_overflow_respects_intra_batch_lru():
     # Batch [A, B, C, A]: with capacity 2 the survivors must be {C, A}.
     batch = SnippetBatch.concat([base, base[jnp.arange(1)]])
     syn.add(batch, np.asarray([1.0, 2.0, 3.0, 1.0]), np.full(4, 0.1))
+    syn.drain()
     assert syn.n == 2
     assert sorted(float(t) for t in syn.theta()) == [1.0, 3.0]
     assert _model_inverse_error(syn) < 1e-6
@@ -202,4 +188,5 @@ def test_synopsis_add_skips_nonfinite_answers():
     snips = _snips(rng, 3)
     syn.add(snips, np.asarray([1.0, np.nan, 2.0]),
             np.asarray([0.1, 0.1, np.inf]))
+    syn.drain()
     assert syn.n == 1
