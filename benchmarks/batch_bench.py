@@ -1,9 +1,11 @@
 """Single-query vs batched-executor throughput on a shared workload.
 
 Measures the tentpole claim of the batched execution layer: serving N
-queries per scan through ``BatchExecutor`` turns N x B ``eval_partials``
-calls into B fused MXU passes, so queries/sec scales with the workload
-instead of with Python dispatch overhead.
+queries per scan through ``Session.execute_many`` turns N x B
+``eval_partials`` calls into B fused MXU passes, so queries/sec scales with
+the workload instead of with Python dispatch overhead. Both paths run
+through the public ``repro.verdict`` facade (one shared plan-IR lifecycle
+underneath).
 
     PYTHONPATH=src python benchmarks/batch_bench.py [--queries 50] [--dry-run]
 
@@ -15,9 +17,8 @@ from __future__ import annotations
 import argparse
 import time
 
+import repro.verdict as vd
 from repro.aqp import workload as W
-from repro.aqp.batch import BatchExecutor
-from repro.core.engine import EngineConfig, VerdictEngine
 
 
 def bench(n_queries=50, n_rows=20_000, n_batches=6, sample_rate=0.15,
@@ -36,22 +37,22 @@ def bench(n_queries=50, n_rows=20_000, n_batches=6, sample_rate=0.15,
     cfg = dict(sample_rate=sample_rate, n_batches=n_batches, capacity=512,
                seed=seed)
 
-    # Warm both engines' jitted paths on a throwaway query (compile time is a
-    # one-off cost; the claim under test is steady-state throughput).
+    # Warm both sessions' jitted paths on a throwaway query (compile time is
+    # a one-off cost; the claim under test is steady-state throughput).
     warm_q = W.make_workload(2, rel.schema, 1)[0]
-    seq = VerdictEngine(rel, EngineConfig(**cfg))
-    bat = VerdictEngine(rel, EngineConfig(**cfg))
+    seq = vd.connect(rel, vd.EngineConfig(**cfg))
+    bat = vd.connect(rel, vd.EngineConfig(**cfg))
     seq.execute(warm_q)
-    BatchExecutor(bat).execute_many([warm_q])
+    bat.execute_many([warm_q])
 
     t0 = time.perf_counter()
     r_seq = [seq.execute(q) for q in qs]
     t_seq = time.perf_counter() - t0
 
-    bx = BatchExecutor(bat)
     t0 = time.perf_counter()
-    r_bat = bx.execute_many(qs)
+    r_bat = bat.execute_many(qs)
     t_bat = time.perf_counter() - t0
+    stats = bat.last_stats
 
     tuples_seq = sum(r.tuples_scanned for r in r_seq)
     tuples_bat = sum(r.tuples_scanned for r in r_bat)
@@ -61,8 +62,8 @@ def bench(n_queries=50, n_rows=20_000, n_batches=6, sample_rate=0.15,
         ("batch/speedup_queries_per_sec", t_seq / t_bat),
         ("batch/seq_tuples_per_sec", tuples_seq / t_seq),
         ("batch/fused_tuples_per_sec", tuples_bat / t_bat),
-        ("batch/dedup_ratio", bx.stats.dedup_ratio),
-        ("batch/eval_calls_fused", float(bx.stats.eval_calls)),
+        ("batch/dedup_ratio", stats.dedup_ratio),
+        ("batch/eval_calls_fused", float(stats.eval_calls)),
         ("batch/eval_calls_seq", float(sum(r.batches_used for r in r_seq))),
     ]
 
@@ -77,6 +78,8 @@ def main():
     ap.add_argument("--queries", type=int, default=50)
     ap.add_argument("--rows", type=int, default=20_000)
     ap.add_argument("--batches", type=int, default=6)
+    ap.add_argument("--out", default="",
+                    help="write name,value rows as JSON to this file")
     ap.add_argument("--dry-run", action="store_true",
                     help="tiny sizes, CI smoke: checks the path runs end-to-end")
     args = ap.parse_args()
@@ -87,6 +90,12 @@ def main():
                      n_batches=args.batches)
     for name, val in rows:
         print(f"{name},{val:.4g}")
+    if args.out:
+        import json
+
+        with open(args.out, "w") as f:
+            json.dump(dict(rows), f, indent=1)
+            f.write("\n")
 
 
 if __name__ == "__main__":

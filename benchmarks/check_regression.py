@@ -1,0 +1,113 @@
+"""CI perf gate: fail when key benchmark metrics regress vs the committed
+baseline.
+
+Runs the smoke configurations of ``batch_bench`` and ``improve_bench`` and
+compares a curated subset of their metrics against
+``benchmarks/baseline.json``. Only machine-portable metrics are gated —
+speedup ratios, dedup ratios, compiled-program counts, and the bitwise
+oracle flag — never absolute milliseconds, so the gate is meaningful on
+shared CI runners. A metric fails when it is more than ``tolerance``
+(default 25%) WORSE than the baseline in its recorded direction; being
+better never fails.
+
+    PYTHONPATH=src python benchmarks/check_regression.py
+    PYTHONPATH=src python benchmarks/check_regression.py --update  # re-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def current_metrics(improve_report: str = "") -> dict:
+    import batch_bench
+
+    rows = dict(batch_bench.bench(n_queries=6, n_rows=2_000, n_batches=2))
+    if improve_report and os.path.exists(improve_report):
+        # Reuse the already-run smoke's JSON artifact instead of paying the
+        # jit compiles a second time (CI runs the bench right before us).
+        with open(improve_report) as f:
+            rep = json.load(f)
+        for fill, r in rep["latency"].items():
+            rows[f"improve/speedup_p50_n{fill}"] = r["speedup_p50"]
+        rows["improve/mixed_q_programs"] = float(
+            rep["mixed_q"]["programs_compiled"])
+        rows["improve/oracle_bitwise_equal"] = float(
+            rep["oracle"]["bitwise_equal"])
+    else:
+        import improve_bench
+
+        imp_rows, _ = improve_bench.bench(smoke=True)
+        rows.update(dict(imp_rows))
+    return rows
+
+
+def check(baseline: dict, rows: dict) -> int:
+    tol = float(baseline.get("tolerance", 0.25))
+    failures = 0
+    print(f"{'metric':<40} {'baseline':>10} {'current':>10} {'status':>8}")
+    for name, spec in sorted(baseline["metrics"].items()):
+        if name not in rows:
+            print(f"{name:<40} {'-':>10} {'-':>10} {'MISSING':>8}")
+            failures += 1
+            continue
+        base, cur = float(spec["value"]), float(rows[name])
+        if spec.get("higher_is_better", True):
+            bad = cur < base * (1.0 - tol)
+        else:
+            bad = cur > base * (1.0 + tol)
+        print(f"{name:<40} {base:>10.4g} {cur:>10.4g} "
+              f"{'FAIL' if bad else 'ok':>8}")
+        failures += bad
+    return failures
+
+
+def update(rows: dict) -> dict:
+    gated = {
+        # (metric, higher_is_better)
+        "batch/speedup_queries_per_sec": True,
+        "batch/dedup_ratio": True,
+        "improve/speedup_p50_n8": True,
+        "improve/mixed_q_programs": False,
+        "improve/oracle_bitwise_equal": True,
+    }
+    return {
+        "tolerance": 0.25,
+        "metrics": {
+            name: {"value": rows[name], "higher_is_better": hib}
+            for name, hib in gated.items()
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--improve-report", default="",
+                    help="reuse this improve_bench JSON instead of re-running")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current run")
+    args = ap.parse_args()
+    sys.path.insert(0, os.path.dirname(__file__))
+    rows = current_metrics(args.improve_report)
+    if args.update:
+        blob = update(rows)
+        with open(args.baseline, "w") as f:
+            json.dump(blob, f, indent=1)
+            f.write("\n")
+        print(f"baseline written to {args.baseline}")
+        return
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(baseline, rows)
+    if failures:
+        raise SystemExit(f"{failures} benchmark metric(s) regressed >25%")
+    print("benchmark gate: all metrics within tolerance")
+
+
+if __name__ == "__main__":
+    main()

@@ -149,16 +149,16 @@ def bench_mixed_q_programs(capacity, fills, q_list, seed=1):
 
 
 def bench_oracle_parity(n_queries, n_rows, seed=2):
-    """Batched answers vs the sequential ``execute`` oracle, bit for bit."""
-    from repro.core.engine import EngineConfig, VerdictEngine
+    """Facade answers vs the sequential per-query oracle, bit for bit."""
+    import repro.verdict as vd
 
     rel = W.make_relation(seed=seed, n_rows=n_rows, n_num=2, cat_sizes=(4,),
                           n_measures=1, lengthscale=0.4, noise=0.2)
     qs = W.make_workload(1, rel.schema, n_queries,
                          agg_kinds=("AVG", "COUNT", "SUM"), cat_pred_prob=0.3)
     cfg = dict(sample_rate=0.15, n_batches=4, capacity=256, seed=0)
-    seq = VerdictEngine(rel, EngineConfig(**cfg))
-    bat = VerdictEngine(rel, EngineConfig(**cfg))
+    seq = vd.connect(rel, vd.EngineConfig(**cfg))
+    bat = vd.connect(rel, vd.EngineConfig(**cfg))
     r_seq = [seq.execute(q) for q in qs]
     r_bat = bat.execute_many(qs)
     equal = all(a.cells == b.cells and a.batches_used == b.batches_used
@@ -168,7 +168,9 @@ def bench_oracle_parity(n_queries, n_rows, seed=2):
 
 def bench(smoke=False):
     if smoke:
-        capacity, fills, q, iters = 256, (8, 32), 8, 5
+        # Enough iterations for a stable p50 — these ops are sub-ms, and the
+        # CI regression gate compares the speedup against a committed floor.
+        capacity, fills, q, iters = 256, (8, 32), 8, 40
         q_list = [1, 3, 8, 12, 17]
         oracle = bench_oracle_parity(n_queries=6, n_rows=2_000)
     else:

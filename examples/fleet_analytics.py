@@ -2,18 +2,20 @@
 
 The natural coupling between the paper's engine and the LM substrate it ships
 with: request logs (latency, tokens, batch, model id, timestamp) become a
-relation; operators ask streams of aggregate dashboards queries; Verdict
-learns the telemetry distribution and answers from ever-smaller samples.
+relation; operators ask streams of aggregate dashboard queries through the
+``repro.verdict`` Session API (typed builder over named columns), microbatched
+by ``AqpService``; Verdict learns the telemetry distribution and answers from
+ever-smaller samples.
 
-    PYTHONPATH=src python examples/fleet_analytics.py
+    PYTHONPATH=src python examples/fleet_analytics.py [--smoke]
 """
+import argparse
+
 import numpy as np
 
-from repro.aqp.queries import AggQuery, AggSpec, CatEq, NumRange
+import repro.verdict as vd
 from repro.aqp.relation import Relation
-from repro.core.engine import EngineConfig, VerdictEngine
 from repro.core.types import Schema
-from repro.serving.aqp import AqpService
 
 
 def make_telemetry(seed=0, n=200_000):
@@ -37,38 +39,45 @@ def make_telemetry(seed=0, n=200_000):
                                  np.stack([latency_ms, tokens_out], 1))
 
 
-def main():
-    rel = make_telemetry()
-    eng = VerdictEngine(rel, EngineConfig(sample_rate=0.05, n_batches=8,
-                                          capacity=512))
-    svc = AqpService(eng, max_batch=16, target_rel_error=0.02)
+def main(smoke: bool = False):
+    rel = make_telemetry(n=10_000 if smoke else 200_000)
+    session = vd.connect(rel, vd.EngineConfig(sample_rate=0.05, n_batches=8,
+                                              capacity=512))
+    svc = session.serve(max_batch=16,
+                        budget=vd.ErrorBudget(target_rel_error=0.02))
     rng = np.random.default_rng(1)
 
     def dashboard_wave(n):
+        # Typed builder: named columns resolved through the schema.
         return [
-            AggQuery(
-                aggs=(AggSpec("AVG", 0),),
-                predicates=(NumRange(0, t0, t0 + rng.uniform(2, 12)),
-                            CatEq(0, int(rng.integers(0, 10)))))
+            session.query().avg("latency_ms").where(
+                vd.between("hour", t0, t0 + rng.uniform(2, 12)),
+                vd.equals("model", int(rng.integers(0, 10))),
+            ).build()
             for t0 in rng.uniform(0, 60, n)
         ]
 
     print("operator dashboard queries (avg latency by window/model),")
     print("microbatched: each wave is ONE fused scan serving all queries:")
-    for wave, n in ((0, 12), (1, 13)):
+    waves = ((0, 4), (1, 5)) if smoke else ((0, 12), (1, 13))
+    for wave, n in waves:
         results = svc.execute(dashboard_wave(n))
         st = svc.last_stats
         print(f"  wave {wave}: {n} queries, {st.eval_calls} sample-batch scans, "
               f"dedup {st.n_snippets_total}->{st.n_snippets_fused}")
         for i, r in enumerate(results):
-            c = r.cells[0]
-            print(f"  q{i:02d}: avg latency {c['estimate']:8.2f} ms "
-                  f"+- {1.96*np.sqrt(c['beta2']):6.2f}  "
+            c = r.cells[0]  # typed Cell via the Session facade
+            print(f"  q{i:02d}: avg latency {c.estimate:8.2f} ms "
+                  f"+- {c.error_bound(0.95):6.2f}  "
                   f"(batches used: {r.batches_used})")
         if wave == 0:
-            eng.refit(steps=50)
+            session.refit(steps=10 if smoke else 50)
             print("  --- refit: engine has learned the diurnal pattern ---")
+    print(f"  ingest back-pressure: {session.ingest_stats()}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: checks the path end-to-end")
+    main(**vars(ap.parse_args()))

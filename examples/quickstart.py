@@ -1,42 +1,57 @@
 """Quickstart: a database that gets smarter with every query.
 
-Builds a synthetic relation, runs a stream of aggregate queries through
-Verdict, and prints how the error bound and the data budget needed per query
-shrink as the synopsis grows — the paper's Figure 1 in terminal form.
+Builds a synthetic relation, connects a ``repro.verdict`` Session, and runs
+a stream of aggregate queries; the printout shows how the error bound and
+the data budget needed per query shrink as the synopsis grows — the paper's
+Figure 1 in terminal form, through the public Session API.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
 """
+import argparse
+
 import numpy as np
 
+import repro.verdict as vd
 from repro.aqp import workload as W
-from repro.core.engine import EngineConfig, VerdictEngine
 
 
-def main():
-    rel = W.make_relation(seed=0, n_rows=30_000, n_num=2, cat_sizes=(4,),
+def main(smoke: bool = False):
+    n_rows, n_queries = (4_000, 8) if smoke else (30_000, 40)
+    rel = W.make_relation(seed=0, n_rows=n_rows, n_num=2, cat_sizes=(4,),
                           n_measures=1, lengthscale=0.4, noise=0.2)
-    engine = VerdictEngine(rel, EngineConfig(sample_rate=0.15, n_batches=8,
-                                             capacity=512))
-    queries = W.make_workload(1, rel.schema, 40, agg_kinds=("AVG",),
+    session = vd.connect(rel, vd.EngineConfig(sample_rate=0.15, n_batches=8,
+                                              capacity=512))
+    queries = W.make_workload(1, rel.schema, n_queries, agg_kinds=("AVG",),
                               width_range=(0.15, 0.5))
+    budget = vd.ErrorBudget(target_rel_error=0.02)
 
-    print(f"{'query':>5} {'batches used':>12} {'raw bound':>10} "
-          f"{'improved':>10} {'accepted':>9}")
+    print(f"{'query':>5} {'batches used':>12} {'max rel err':>11} "
+          f"{'truncated':>9}")
     for i, q in enumerate(queries):
-        r = engine.execute(q, target_rel_error=0.02)
-        imp = r.snippet_answer
-        raw_b = float(np.sqrt(np.asarray(imp.raw_beta2)).mean())
-        imp_b = float(np.sqrt(np.asarray(imp.beta2)).mean())
-        acc = int(np.asarray(imp.accepted).sum())
-        print(f"{i:5d} {r.batches_used:12d} {raw_b:10.4f} {imp_b:10.4f} "
-              f"{acc:9d}/{imp.accepted.shape[0]}")
-        if i == 19:
+        a = session.execute(q, budget)
+        print(f"{i:5d} {a.batches_used:12d} {a.max_rel_error():11.4f} "
+              f"{a.truncated_groups:9d}")
+        if i == min(19, n_queries // 2):
             print("--- offline refit (Algorithm 1) ---")
-            engine.refit(steps=60)
-    total = sum(len(b) for b in engine.batches.batch_rows)
+            session.refit(steps=10 if smoke else 60)
+
+    # The typed builder resolves column names through the schema:
+    q = (session.query().avg("v0")
+         .where(vd.between("x0", 2.0, 8.0))
+         .group_by("c0"))
+    print("\nexplain before running:")
+    print(session.explain(q))
+    print("\nstreaming refinement (online aggregation):")
+    for partial in session.stream(q):
+        marker = "final" if partial.final else "....."
+        print(f"  [{marker}] after {partial.batches_used} batches: "
+              f"max rel err {partial.max_rel_error():.4f}")
     print("\nThe engine needs fewer online-aggregation batches per query as "
           "the synopsis grows: it is learning the data distribution.")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: checks the path end-to-end")
+    main(**vars(ap.parse_args()))

@@ -1,45 +1,55 @@
 """TPC-H-flavoured demo: Verdict vs NoLearn on a star-schema fact table.
 
-Reproduces the Table-4 experience at laptop scale: same accuracy sooner, or
-better accuracy for the same budget — including group-by and SUM/COUNT
-queries (decomposed into AVG/FREQ snippets per paper §2.3).
+Reproduces the Table-4 experience at laptop scale through the public
+``repro.verdict`` Session API: same accuracy sooner, or better accuracy for
+the same budget — including group-by and SUM/COUNT queries (decomposed into
+AVG/FREQ snippets per paper §2.3).
 
-    PYTHONPATH=src python examples/tpch_demo.py
+    PYTHONPATH=src python examples/tpch_demo.py [--smoke]
 """
-import numpy as np
+import argparse
 
+import repro.verdict as vd
 from repro.aqp import workload as W
-from repro.core.engine import EngineConfig, VerdictEngine
 
 
-def main():
-    rel = W.tpch_like(seed=0, n_rows=100_000)
-    train_q = W.tpch_workload(1, rel.schema, n_queries=30)
-    test_q = W.tpch_workload(2, rel.schema, n_queries=10)
+def main(smoke: bool = False):
+    n_rows = 8_000 if smoke else 100_000
+    n_train, n_test = (6, 3) if smoke else (30, 10)
+    rel = W.tpch_like(seed=0, n_rows=n_rows)
+    train_q = W.tpch_workload(1, rel.schema, n_queries=n_train)
+    test_q = W.tpch_workload(2, rel.schema, n_queries=n_test)
 
-    verdict = VerdictEngine(rel, EngineConfig(sample_rate=0.1, n_batches=8,
+    verdict = vd.connect(rel, vd.EngineConfig(sample_rate=0.1, n_batches=8,
                                               capacity=512, seed=0))
-    nolearn = VerdictEngine(rel, EngineConfig(sample_rate=0.1, n_batches=8,
+    nolearn = vd.connect(rel, vd.EngineConfig(sample_rate=0.1, n_batches=8,
                                               seed=0, learning=False))
-    print("training on 30 queries (first half of the trace, one fused scan)...")
+    print(f"training on {n_train} queries (first half of the trace, "
+          f"one fused scan)...")
     verdict.execute_many(train_q)
-    verdict.refit(steps=60)
+    verdict.refit(steps=10 if smoke else 60)
 
+    print("\nplan for the first test query:")
+    print(verdict.explain(test_q[0]))
+
+    two = vd.ErrorBudget(max_batches=2)
+    tight = vd.ErrorBudget(target_rel_error=0.025)
     print(f"\n{'#':>3} {'kind':>6} {'cells':>5} {'NoLearn bound%':>15} "
           f"{'Verdict bound%':>15} {'V batches@2.5%':>15} {'N batches@2.5%':>15}")
     for i, q in enumerate(test_q):
-        rv = verdict.execute(q, max_batches=2)
-        rn = nolearn.execute(q, max_batches=2)
-        vb = np.mean([np.sqrt(c["beta2"]) / max(abs(c["estimate"]), 1e-9)
-                      for c in rv.cells]) * 100
-        nb = np.mean([np.sqrt(c["beta2"]) / max(abs(c["estimate"]), 1e-9)
-                      for c in rn.cells]) * 100
-        sv = verdict.execute(q, target_rel_error=0.025)
-        sn = nolearn.execute(q, target_rel_error=0.025)
-        kind = rv.cells[0]["kind"] if rv.cells else "-"
+        rv = verdict.execute(q, two)
+        rn = nolearn.execute(q, two)
+        vb = sum(c.rel_error() for c in rv.cells) / max(len(rv.cells), 1) * 100
+        nb = sum(c.rel_error() for c in rn.cells) / max(len(rn.cells), 1) * 100
+        sv = verdict.execute(q, tight)
+        sn = nolearn.execute(q, tight)
+        kind = rv.cells[0].kind if rv.cells else "-"
         print(f"{i:3d} {kind:>6} {len(rv.cells):5d} {nb:15.2f} {vb:15.2f} "
               f"{sv.batches_used:15d} {sn.batches_used:15d}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: checks the path end-to-end")
+    main(**vars(ap.parse_args()))

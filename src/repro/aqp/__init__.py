@@ -1,3 +1,13 @@
 from repro.aqp.relation import Relation
 from repro.aqp.queries import AggQuery, AggSpec, CatEq, CatIn, NumEq, NumRange
-from repro.aqp.batch import BatchExecutor, BatchStats
+from repro.aqp.plan import (
+    BatchStats,
+    LogicalPlan,
+    PhysicalPlan,
+    QueryResult,
+    WorkloadPlan,
+    plan_workload,
+    replay_query,
+    replay_rounds,
+)
+from repro.aqp.batch import BatchExecutor

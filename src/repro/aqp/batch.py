@@ -6,22 +6,23 @@ snippets from different queries in a workload overlap heavily (repeated
 dashboards, shared group-by cells, popular predicate columns), so evaluating
 each query's plan separately re-reads the same sample batches over and over.
 
-``BatchExecutor`` fuses a whole workload into one scan:
+``BatchExecutor`` fuses a whole workload into one scan. All the machinery
+lives in the shared plan IR (``repro.aqp.plan``); this class just wires it
+to one engine:
 
-1. decompose every query into its ``SnippetPlan`` (unsupported queries get
-   their raw-only probe plan, mirroring ``VerdictEngine._execute_raw_only``);
-2. dedup identical snippets across queries into one fused ``SnippetBatch``,
-   keyed by the same content hash ``Synopsis`` uses (``snippet_key``);
-3. scan sample batches lazily, evaluating each batch EXACTLY ONCE for the
-   union of snippets through the engine's eval path (pure-jnp oracle, Pallas
-   kernel, or ``shard_map``+psum when a mesh is given) — one fused
-   ``mask^T @ payload`` MXU pass per batch instead of one per query; raw-only
-   probes of unsupported queries scan in a second fused set through pure
-   ``eval_partials``, exactly as ``_execute_raw_only`` does;
-4. replay queries in submission order against cumulative per-batch partials:
-   improve via the synopsis, early-stop per query once its improved bound
-   meets the target, and record raw answers — the same state transitions, in
-   the same order, as query-at-a-time execution.
+1. ``plan_workload`` decomposes every query into its ``LogicalPlan``
+   (unsupported queries get their raw-only probe plan) and dedups identical
+   snippets across queries into two fused ``SnippetBatch``es, keyed by the
+   same content hash ``Synopsis`` uses (``snippet_key``);
+2. two ``PhysicalPlan``s scan sample batches lazily, evaluating each batch
+   EXACTLY ONCE for the union of snippets — supported queries through the
+   engine's eval path (pure-jnp oracle, Pallas kernel, or ``shard_map``+psum
+   when a mesh is given), raw-only probes through pure ``eval_partials``;
+3. ``replay_query`` replays queries in submission order against cumulative
+   per-batch partials: improve via the synopsis, early-stop per query once
+   its improved bound meets the target, and record raw answers — the same
+   state transitions, in the same order, as query-at-a-time execution
+   (which since the plan-IR refactor is literally a workload of one).
 
 Learning is asynchronous: ``_record`` enqueues raw answers on the synopsis'
 background ingest thread and ``execute_many`` returns without waiting for the
@@ -33,108 +34,28 @@ needed at snapshot/refit boundaries.
 Because the scan path pads the snippet axis to fixed tiles
 (``pad_snippets``), per-snippet partials are bitwise identical between the
 fused scan and the single-query scan; the replay then performs the exact
-per-query improvement/validation calls ``VerdictEngine.execute`` performs, so
-batched answers equal sequential answers bit for bit while the number of
+per-query improvement/validation calls every path performs, so batched
+answers equal sequential answers bit for bit while the number of
 ``eval_partials`` calls drops from sum(batches_used per query) to
 max(batches_used over queries).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence
-
-import jax.numpy as jnp
-import numpy as np
+from typing import List, Optional, Sequence
 
 from repro.aqp import queries as Q
-from repro.aqp.executor import (
-    Partials,
-    estimates_from_partials,
-    eval_partials,
-    eval_partials_sharded,
+from repro.aqp.executor import eval_partials_sharded
+from repro.aqp.plan import (
+    BatchStats,
+    PhysicalPlan,
+    QueryResult,
+    plain_eval,
+    plan_workload,
+    replay_query,
 )
-from repro.core.types import (
-    ImprovedAnswer,
-    RawAnswer,
-    SnippetBatch,
-    pad_snippets,
-    snippet_key,
-)
+from repro.core.types import SnippetBatch
 
-
-@dataclasses.dataclass
-class BatchStats:
-    """Fusion accounting for one ``execute_many`` call."""
-
-    n_queries: int = 0
-    n_snippets_total: int = 0  # sum of per-query plan sizes
-    n_snippets_fused: int = 0  # after cross-query dedup
-    eval_calls: int = 0  # one per (fused set, scanned sample batch)
-    batches_scanned: int = 0
-
-    @property
-    def dedup_ratio(self) -> float:
-        return self.n_snippets_total / max(self.n_snippets_fused, 1)
-
-
-@dataclasses.dataclass
-class _Pending:
-    """Per-query bookkeeping inside one fused execution."""
-
-    index: int
-    plan: Q.SnippetPlan
-    rows: np.ndarray  # fused row id per plan snippet
-    supported: bool
-    reason: Optional[str] = None
-
-
-class _Deduper:
-    """Accumulates unique snippets across plans, hash-keyed like Synopsis."""
-
-    def __init__(self, schema):
-        self.schema = schema
-        self._keys: Dict[int, int] = {}
-        self.lo: List[np.ndarray] = []
-        self.hi: List[np.ndarray] = []
-        self.cat: List[np.ndarray] = []
-        self.agg: List[int] = []
-        self.measure: List[int] = []
-
-    def intern(self, snippets: SnippetBatch) -> np.ndarray:
-        lo = np.asarray(snippets.lo)
-        hi = np.asarray(snippets.hi)
-        cat = np.asarray(snippets.cat)
-        agg = np.asarray(snippets.agg)
-        mea = np.asarray(snippets.measure)
-        rows = np.empty((lo.shape[0],), np.int64)
-        for i in range(lo.shape[0]):
-            key = snippet_key(lo[i], hi[i], cat[i], agg[i], mea[i])
-            r = self._keys.get(key)
-            if r is None:
-                r = len(self.agg)
-                self._keys[key] = r
-                self.lo.append(lo[i])
-                self.hi.append(hi[i])
-                self.cat.append(cat[i])
-                self.agg.append(int(agg[i]))
-                self.measure.append(int(mea[i]))
-            rows[i] = r
-        return rows
-
-    @property
-    def n(self) -> int:
-        return len(self.agg)
-
-    def fused(self) -> SnippetBatch:
-        if not self.agg:  # all interned plans were empty
-            return SnippetBatch.empty(self.schema)
-        return SnippetBatch(
-            lo=jnp.asarray(np.stack(self.lo)),
-            hi=jnp.asarray(np.stack(self.hi)),
-            cat=jnp.asarray(np.stack(self.cat)),
-            agg=jnp.asarray(np.asarray(self.agg, np.int32)),
-            measure=jnp.asarray(np.asarray(self.measure, np.int32)),
-        )
+__all__ = ["BatchExecutor", "BatchStats"]
 
 
 class BatchExecutor:
@@ -152,7 +73,7 @@ class BatchExecutor:
         self.stats = BatchStats()
 
     # ---------------------------------------------------------------- scan
-    def _eval(self, block, padded: SnippetBatch) -> Partials:
+    def _eval(self, block, padded: SnippetBatch):
         if self.mesh is not None:
             return eval_partials_sharded(
                 self.mesh, self.mesh_axis,
@@ -168,134 +89,23 @@ class BatchExecutor:
         queries: Sequence[Q.AggQuery],
         target_rel_error: Optional[float] = None,
         max_batches: Optional[int] = None,
-    ):
-        from repro.core.engine import QueryResult
-
+        stop_delta: Optional[float] = None,
+    ) -> List[QueryResult]:
         eng = self.engine
-        cfg = eng.config
         max_batches = min(
             max_batches or eng.batches.n_batches, eng.batches.n_batches
         )
-        self.stats = BatchStats(n_queries=len(queries))
+        wp = plan_workload(eng, queries)
+        self.stats = wp.stats
+        phys_main = PhysicalPlan(eng.batches, wp.fused, self._eval,
+                                 stats=wp.stats)
+        phys_raw = PhysicalPlan(eng.batches, wp.fused_raw, plain_eval,
+                                stats=wp.stats)
         results: List[Optional[QueryResult]] = [None] * len(queries)
-
-        # ---- phase 1: plan + dedup across the whole workload
-        # Two fused sets, mirroring the sequential engine exactly: supported
-        # queries scan through the engine's eval fn (kernel / mesh capable),
-        # raw-only probes through pure eval_partials (engine.py does the same).
-        # Group discovery is fused too: ONE first-batch predicate_mask eval
-        # covers every query's probe (identical booleans to per-query probes).
-        dedup = _Deduper(eng.schema)
-        dedup_raw = _Deduper(eng.schema)
-        pend: List[_Pending] = []
-        reasons = [Q.unsupported_reason(q) for q in queries]
-        probes = [q if r is None else eng.raw_only_probe(q)
-                  for q, r in zip(queries, reasons)]
-        groups_all = eng._discover_groups_many(probes)
-        for qi, q in enumerate(queries):
-            reason = reasons[qi]
-            probe = probes[qi]
-            groups = groups_all[qi]
-            if reason is None and not groups:
-                results[qi] = QueryResult([], 0, 0, True, plan=None)
-                continue
-            plan = Q.decompose(eng.schema, probe, groups, n_max=cfg.n_max)
-            rows = (dedup if reason is None else dedup_raw).intern(plan.snippets)
-            self.stats.n_snippets_total += plan.snippets.n
-            pend.append(_Pending(qi, plan, rows, reason is None, reason))
-        self.stats.n_snippets_fused = dedup.n + dedup_raw.n
-        if not pend:
-            return results
-
-        # ---- phase 2: lazy fused scans with cumulative snapshots
-        def make_scan(padded: SnippetBatch, evalfn):
-            snapshots: List[Partials] = []
-            estimates: Dict[int, tuple] = {}
-
-            def raw_at(b: int, rows: np.ndarray) -> RawAnswer:
-                while len(snapshots) <= b:
-                    i = len(snapshots)
-                    block = eng.batches.relation.take(eng.batches.batch_rows[i])
-                    part = evalfn(block, padded)
-                    snapshots.append(
-                        part if not snapshots else snapshots[-1] + part
-                    )
-                    self.stats.eval_calls += 1
-                    self.stats.batches_scanned += 1
-                if b not in estimates:
-                    theta, beta2, _ = estimates_from_partials(
-                        snapshots[b], padded
-                    )
-                    estimates[b] = (theta, beta2)
-                theta, beta2 = estimates[b]
-                idx = jnp.asarray(rows)
-                return RawAnswer(theta[idx], beta2[idx])
-
-            return raw_at
-
-        raw_at = make_scan(pad_snippets(dedup.fused()), self._eval)
-        raw_at_plain = make_scan(
-            pad_snippets(dedup_raw.fused()),
-            lambda block, padded: eval_partials(
-                block.num_normalized, block.cat, block.measures, padded
-            ),
-        )
-
-        # ---- phase 3: per-query replay in submission order
-        for p in pend:
-            if not p.supported:
-                raw = raw_at_plain(max_batches - 1, p.rows)
-                cells = Q.assemble_results(
-                    p.plan, raw.theta, raw.beta2, eng.batches.source_cardinality
-                )
-                results[p.index] = QueryResult(
-                    cells, max_batches, eng._tuples(max_batches), False,
-                    p.reason, plan=p.plan,
-                )
-                continue
-            n = p.plan.snippets.n
-            improved = raw = result = None
-            used = 0
-            # Without a target, intermediate improvements are side-effect-free
-            # no-ops in the sequential path too — jump straight to the final
-            # batch.
-            rounds = range(max_batches) if target_rel_error is not None else (
-                max_batches - 1,
+        for lp in wp.logical:
+            results[lp.index] = replay_query(
+                eng, lp, phys_main if lp.supported else phys_raw,
+                target_rel_error=target_rel_error, max_batches=max_batches,
+                stop_delta=stop_delta,
             )
-            for b in rounds:
-                raw = raw_at(b, p.rows)
-                used = b + 1
-                if cfg.learning:
-                    improved = eng._improve(p.plan.snippets, raw)
-                else:
-                    improved = ImprovedAnswer(
-                        raw.theta, raw.beta2, raw.theta, raw.beta2,
-                        jnp.zeros((n,), bool),
-                    )
-                if target_rel_error is not None:
-                    cells = Q.assemble_results(
-                        p.plan, improved.theta, improved.beta2,
-                        eng.batches.source_cardinality,
-                    )
-                    res = QueryResult(
-                        cells, used, eng._tuples(used), True,
-                        snippet_answer=improved, plan=p.plan,
-                    )
-                    if res.max_rel_error(cfg.report_delta) <= target_rel_error:
-                        if cfg.learning:
-                            eng._record(p.plan.snippets, raw)
-                        result = res
-                        break
-            if result is None:
-                cells = Q.assemble_results(
-                    p.plan, improved.theta, improved.beta2,
-                    eng.batches.source_cardinality,
-                )
-                if cfg.learning and raw is not None:
-                    eng._record(p.plan.snippets, raw)
-                result = QueryResult(
-                    cells, used, eng._tuples(used), True,
-                    snippet_answer=improved, plan=p.plan,
-                )
-            results[p.index] = result
         return results

@@ -5,15 +5,19 @@ emitting (raw theta, raw beta^2) after each batch. The Verdict engine wraps
 each emission with model-based improvement and stops as soon as the *improved*
 error meets the target — that early stop is exactly where the paper's speedup
 comes from.
+
+Since the plan-IR refactor this is a thin generator over
+``repro.aqp.plan.PhysicalPlan`` — the same lazy cumulative-partials scan
+every execution path uses; the public ``Session.stream`` facade adds the
+improve/validate/record lifecycle on top.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Iterator, Optional, Tuple
 
-import jax.numpy as jnp
-
-from repro.aqp.executor import Partials, estimates_from_partials, eval_partials
+from repro.aqp.executor import Partials, eval_partials
+from repro.aqp.plan import PhysicalPlan
 from repro.aqp.sampler import SampleBatches
 from repro.core.types import RawAnswer, SnippetBatch
 
@@ -29,14 +33,21 @@ def online_answers(
     snippets: SnippetBatch,
     eval_fn: Optional[Callable] = None,
 ) -> Iterator[Tuple[RawAnswer, OnlineState]]:
-    """Yields increasingly accurate raw answers after each sample batch."""
+    """Yields increasingly accurate raw answers after each sample batch.
+
+    ``eval_fn(num_normalized, cat, measures, snippets)`` is invoked on the
+    TILE-PADDED snippet batch (``pad_snippets``); per-snippet partials are
+    bitwise independent of padding, and the yielded answers/partials are
+    sliced back to ``snippets.n``.
+    """
     eval_fn = eval_fn or eval_partials
-    acc = Partials.zeros(snippets.n)
-    used = 0
-    for block in batches:
-        acc = acc + eval_fn(
-            block.num_normalized, block.cat, block.measures, snippets
-        )
-        used += 1
-        theta, beta2, _ = estimates_from_partials(acc, snippets)
-        yield RawAnswer(theta=theta, beta2=beta2), OnlineState(acc, used)
+    phys = PhysicalPlan(
+        batches,
+        snippets,
+        lambda block, padded: eval_fn(
+            block.num_normalized, block.cat, block.measures, padded
+        ),
+    )
+    for b in range(batches.n_batches):
+        raw = phys.raw_at(b)
+        yield raw, OnlineState(phys.partials_at(b), b + 1)

@@ -123,11 +123,16 @@ class SnippetPlan:
     cells: list of (group_index, agg_index, kind, avg_row, freq_row); avg_row /
     freq_row are row ids into ``snippets`` or -1.
     groups: list of group-value tuples (empty tuple when no group-by).
+    truncated_groups: discovered group-by values dropped by the ``n_max`` cap
+    — recorded so callers (``QueryResult``, ``Session.explain``) can see that
+    the result covers a prefix of the full group set instead of silently
+    missing cells.
     """
 
     snippets: SnippetBatch
     cells: Tuple
     groups: Tuple
+    truncated_groups: int = 0
 
 
 def decompose(
@@ -142,7 +147,9 @@ def decompose(
     set (obtained from the AQP engine's sample scan), capped at n_max groups.
     """
     num_ranges, cat_sets = predicates_to_arrays(schema, q.predicates)
-    groups = tuple(group_values)[:n_max]
+    all_groups = tuple(group_values)
+    groups = all_groups[:n_max]
+    truncated = len(all_groups) - len(groups)
 
     need_avg = [a.kind in ("AVG", "SUM") and a.measure is not None for a in q.aggs]
     need_freq = [a.kind in ("SUM", "COUNT") for a in q.aggs]
@@ -183,7 +190,8 @@ def decompose(
         num_ranges=rows_num,
         cat_sets=rows_cat,
     )
-    return SnippetPlan(snippets=snippets, cells=tuple(cells), groups=groups)
+    return SnippetPlan(snippets=snippets, cells=tuple(cells), groups=groups,
+                       truncated_groups=truncated)
 
 
 def assemble_results(plan: SnippetPlan, theta, beta2, cardinality: int):

@@ -79,14 +79,27 @@ def make_relation(
     return Relation.from_columns(schema, x, cats, measures)
 
 
-def _power_law_column(rng, n_cols: int, frac_frequent: float):
-    """§8.6: first ``frac`` columns equally likely; tail decays by halving."""
+def power_law_probs(n_cols: int, frac_frequent: float) -> np.ndarray:
+    """§8.6 column-access distribution: the first ``ceil(n_cols * frac)``
+    "frequently accessed" columns are equally likely; every tail column is
+    half as likely as its predecessor, starting from half the per-frequent-
+    column mass.
+
+    The halving chains off the head instead of a hardcoded ``0.5`` — with
+    the all-ones head the old constant was numerically identical (so seeded
+    workloads are unchanged), but it silently encoded the head mass; this
+    form states the scheme structurally and is pinned by distribution tests.
+    """
     k = max(int(np.ceil(n_cols * frac_frequent)), 1)
     probs = np.ones(n_cols)
     for i in range(k, n_cols):
-        probs[i] = probs[i - 1] / 2.0 if i > k else 0.5
-    probs = probs / probs.sum()
-    return int(rng.choice(n_cols, p=probs))
+        probs[i] = probs[i - 1] / 2.0
+    return probs / probs.sum()
+
+
+def _power_law_column(rng, n_cols: int, frac_frequent: float):
+    """Draw one column index from the §8.6 power-law scheme."""
+    return int(rng.choice(n_cols, p=power_law_probs(n_cols, frac_frequent)))
 
 
 def make_workload(

@@ -11,6 +11,11 @@ Workflow per query:
   4. insert the final raw answers into the synopsis (the model learns from
      *raw* answers, never from its own outputs).
 
+The lifecycle itself lives in the shared plan IR (``repro.aqp.plan``):
+``execute(q)`` is literally ``execute_many([q])[0]``, so the engine holds
+only the synopsis state, the improvement/record hooks the replay calls into,
+and the sample-batch stream.
+
 ``learning=False`` turns the engine into the NoLearn baseline of §8.1.
 """
 from __future__ import annotations
@@ -23,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.aqp import queries as Q
-from repro.aqp.executor import estimates_from_partials, eval_partials, Partials
+from repro.aqp.executor import eval_partials
+from repro.aqp.plan import QueryResult  # noqa: F401 — canonical home is the plan IR
 from repro.aqp.relation import Relation
 from repro.aqp.sampler import SampleBatches, build_sample
 from repro.core.synopsis import (
@@ -34,7 +40,6 @@ from repro.core.synopsis import (
 )
 from repro.core.types import (
     AVG,
-    FREQ,
     ImprovedAnswer,
     RawAnswer,
     Schema,
@@ -42,7 +47,6 @@ from repro.core.types import (
     bucket_size,
     pad_snippets,
 )
-from repro.utils.stats import confidence_multiplier
 
 
 @dataclasses.dataclass
@@ -57,25 +61,7 @@ class EngineConfig:
     seed: int = 0
     use_kernels: bool = False  # route hot paths through the Pallas kernels
     async_ingest: bool = True  # learn on the background ingest thread
-
-
-@dataclasses.dataclass
-class QueryResult:
-    cells: List[dict]
-    batches_used: int
-    tuples_scanned: int
-    supported: bool
-    unsupported_reason: Optional[str] = None
-    snippet_answer: Optional[ImprovedAnswer] = None
-    plan: Optional[Q.SnippetPlan] = None
-
-    def max_rel_error(self, delta: float = 0.95) -> float:
-        alpha = float(confidence_multiplier(delta))
-        worst = 0.0
-        for c in self.cells:
-            denom = max(abs(c["estimate"]), 1e-9)
-            worst = max(worst, alpha * np.sqrt(c["beta2"]) / denom)
-        return worst
+    ingest_max_pending: int = 64  # back-pressure bound on pending ingest batches
 
 
 class VerdictEngine:
@@ -105,6 +91,7 @@ class VerdictEngine:
                 capacity=self.config.capacity,
                 delta_v=self.config.delta_v,
                 async_ingest=self.config.async_ingest,
+                max_pending=self.config.ingest_max_pending,
             )
         return self.synopses[key]
 
@@ -121,6 +108,13 @@ class VerdictEngine:
         """Offline learning pass (paper Algorithm 1). Drains async ingest."""
         for syn in self.synopses.values():
             syn.refit(steps=steps, lr=lr, learn_sigma=learn_sigma)
+
+    def ingest_stats(self) -> Dict[str, dict]:
+        """Per-synopsis async-ingest back-pressure telemetry."""
+        return {
+            f"{agg}_{mea}": self.synopses[(agg, mea)].ingest_stats()
+            for (agg, mea) in sorted(self.synopses)
+        }
 
     # ------------------------------------------------------------ improve
     def _group_rows(self, snippets: SnippetBatch):
@@ -273,80 +267,33 @@ class VerdictEngine:
         target_rel_error: Optional[float] = None,
         max_batches: Optional[int] = None,
     ) -> QueryResult:
-        reason = Q.unsupported_reason(q)
-        max_batches = max_batches or self.batches.n_batches
-        if reason is not None:
-            return self._execute_raw_only(q, reason, max_batches)
-
-        groups = self._discover_groups(q)
-        if not groups:
-            return QueryResult([], 0, 0, True, plan=None)
-        plan = Q.decompose(self.schema, q, groups, n_max=self.config.n_max)
-        # Scan over a tile-padded batch: shape-stable across plans (one
-        # compiled program per size bucket) and bitwise-reproducible per row,
-        # so the fused BatchExecutor path can match this one exactly.
-        padded = pad_snippets(plan.snippets)
-        n = plan.snippets.n
-        acc = Partials.zeros(padded.n)
-        used = 0
-        improved = None
-        raw = None
-        for rows in self.batches.batch_rows[:max_batches]:
-            block = self.batches.relation.take(rows)
-            acc = acc + self._eval_fn(
-                block.num_normalized, block.cat, block.measures, padded
-            )
-            used += 1
-            theta, beta2, _ = estimates_from_partials(acc, padded)
-            raw = RawAnswer(theta[:n], beta2[:n])
-            if self.config.learning:
-                improved = self._improve(plan.snippets, raw)
-            else:
-                improved = ImprovedAnswer(
-                    raw.theta, raw.beta2, raw.theta, raw.beta2,
-                    jnp.zeros((n,), bool),
-                )
-            if target_rel_error is not None:
-                cells = Q.assemble_results(
-                    plan, improved.theta, improved.beta2, self.batches.source_cardinality
-                )
-                res = QueryResult(cells, used, self._tuples(used), True,
-                                  snippet_answer=improved, plan=plan)
-                if res.max_rel_error(self.config.report_delta) <= target_rel_error:
-                    if self.config.learning:
-                        self._record(plan.snippets, raw)
-                    return res
-        cells = Q.assemble_results(
-            plan, improved.theta, improved.beta2, self.batches.source_cardinality
-        )
-        if self.config.learning and raw is not None:
-            self._record(plan.snippets, raw)
-        return QueryResult(cells, used, self._tuples(used), True,
-                           snippet_answer=improved, plan=plan)
+        """One query is a workload of one: the entire lifecycle (plan, fused
+        scan, improve, validate, early-stop, record) lives in
+        ``repro.aqp.plan.replay_query`` — there is no second copy here."""
+        return self.execute_many(
+            [q], target_rel_error=target_rel_error, max_batches=max_batches
+        )[0]
 
     def _tuples(self, used_batches: int) -> int:
         return int(sum(len(b) for b in self.batches.batch_rows[:used_batches]))
 
     def _execute_raw_only(self, q, reason, max_batches):
-        """Unsupported queries: raw AQP answers, no learning (paper §2.2)."""
+        """Forced raw-only execution: raw AQP answers over the supported
+        subset probe, no learning, whatever ``q``'s own supportedness
+        (paper §2.2). The lifecycle is the ``supported=False`` branch of the
+        shared ``replay_query`` — no scan loop lives here.
+        """
+        from repro.aqp.plan import (LogicalPlan, PhysicalPlan,
+                                    SnippetInterner, plain_eval, replay_query)
+
         probe = self.raw_only_probe(q)
         groups = self._discover_groups(probe)
         plan = Q.decompose(self.schema, probe, groups, n_max=self.config.n_max)
-        padded = pad_snippets(plan.snippets)
-        acc = Partials.zeros(padded.n)
-        used = 0
-        for rows in self.batches.batch_rows[:max_batches]:
-            block = self.batches.relation.take(rows)
-            acc = acc + eval_partials(
-                block.num_normalized, block.cat, block.measures, padded
-            )
-            used += 1
-        theta, beta2, _ = estimates_from_partials(acc, padded)
-        n = plan.snippets.n
-        cells = Q.assemble_results(
-            plan, theta[:n], beta2[:n], self.batches.source_cardinality
-        )
-        return QueryResult(cells, used, self._tuples(used), False, reason, plan=plan)
+        interner = SnippetInterner(self.schema)
+        rows = interner.intern(plan.snippets)
+        lp = LogicalPlan(0, q, probe, reason or "forced raw-only", plan, rows)
+        phys = PhysicalPlan(self.batches, interner.fused(), plain_eval)
+        return replay_query(self, lp, phys, max_batches=max_batches)
 
     def raw_only_probe(self, q: Q.AggQuery) -> Q.AggQuery:
         """The supported-subset probe the raw-only path evaluates (§2.2)."""
@@ -401,15 +348,19 @@ class VerdictEngine:
         target_rel_error: Optional[float] = None,
         max_batches: Optional[int] = None,
         mesh=None,
+        stop_delta: Optional[float] = None,
     ) -> List[QueryResult]:
         """Execute a workload through the fused ``BatchExecutor`` path.
 
         Every sample batch is scanned exactly once for the whole workload
         (identical snippets deduped across queries); answers match ``execute``
-        run query-by-query bit for bit. See ``repro.aqp.batch``.
+        run query-by-query bit for bit. ``stop_delta`` overrides the
+        confidence level of the early-stop check (default
+        ``config.report_delta``). See ``repro.aqp.batch``.
         """
         from repro.aqp.batch import BatchExecutor
 
         return BatchExecutor(self, mesh=mesh).execute_many(
-            queries, target_rel_error=target_rel_error, max_batches=max_batches
+            queries, target_rel_error=target_rel_error,
+            max_batches=max_batches, stop_delta=stop_delta,
         )

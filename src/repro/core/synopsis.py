@@ -170,6 +170,9 @@ def _drain_live_queues():
             pass
 
 
+MAX_PENDING_DEFAULT = 64  # ingest back-pressure bound (pending batches)
+
+
 class _IngestQueue:
     """Background applier for ``Synopsis.add`` batches.
 
@@ -180,6 +183,13 @@ class _IngestQueue:
     The worker thread is daemonic, starts lazily, and exits after an idle
     period (``submit`` restarts it on demand).
 
+    The queue is BOUNDED (``max_pending`` batches): ``try_submit`` refuses
+    new work while the worker is that far behind, and the caller sheds to
+    synchronous ingestion (drain, then apply inline — FIFO order and hence
+    bitwise determinism are preserved). ``high_water`` records the deepest
+    backlog observed, so operators can see how close serving runs to the
+    bound.
+
     A failed apply POISONS the queue: the partial mutation cannot be rolled
     back, so later batches are discarded unapplied and every subsequent
     ``drain()`` re-raises — the synopsis never silently serves (or
@@ -188,8 +198,10 @@ class _IngestQueue:
 
     IDLE_TIMEOUT = 5.0
 
-    def __init__(self, apply_fn):
+    def __init__(self, apply_fn, max_pending: int = MAX_PENDING_DEFAULT):
         self._apply = apply_fn
+        self.max_pending = int(max_pending)
+        self.high_water = 0
         self._pending: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._outstanding = 0
@@ -197,16 +209,21 @@ class _IngestQueue:
         self._exc: Optional[BaseException] = None
         _LIVE_QUEUES.add(self)
 
-    def submit(self, item):
+    def try_submit(self, item) -> bool:
+        """Enqueue unless the backlog is at the bound; False means shed."""
         with self._cv:
+            if self._outstanding >= self.max_pending:
+                return False
             self._pending.append(item)
             self._outstanding += 1
+            self.high_water = max(self.high_water, self._outstanding)
             if self._thread is None:
                 self._thread = threading.Thread(
                     target=self._run, name="synopsis-ingest", daemon=True
                 )
                 self._thread.start()
             self._cv.notify_all()
+            return True
 
     def _run(self):
         while True:
@@ -251,11 +268,15 @@ class Synopsis:
         delta_v: float = 0.99,
         params: Optional[GPParams] = None,
         async_ingest: bool = True,
+        max_pending: int = MAX_PENDING_DEFAULT,
     ):
         self.schema = schema
         self.capacity = int(capacity)
         self.delta_v = float(delta_v)
         self.async_ingest = bool(async_ingest)
+        self.max_pending = int(max_pending)
+        self._shed_count = 0
+        self._restored_high_water = 0
         l, c, v = schema.n_num, schema.n_cat, max(schema.cat_vmax, 1)
         C = self.capacity
         self._lo = np.zeros((C, l))
@@ -315,6 +336,11 @@ class Synopsis:
         the barrier; batches apply strictly in FIFO order, so the post-drain
         state is bitwise identical to synchronous ingestion
         (``async_ingest=False`` applies inline instead).
+
+        Back-pressure: the ingest queue holds at most ``max_pending``
+        batches. Under overload the caller sheds to synchronous ingestion —
+        drain the backlog, then apply this batch inline — which bounds host
+        memory and keeps FIFO order (determinism) intact.
         """
         item = (
             np.array(np.asarray(snippets.lo), dtype=np.float64),
@@ -329,14 +355,32 @@ class Synopsis:
             self._apply_add(*item)
             return
         if self._ingest is None:
-            self._ingest = _IngestQueue(self._apply_add)
-        self._ingest.submit(item)
+            self._ingest = _IngestQueue(self._apply_add,
+                                        max_pending=self.max_pending)
+        if not self._ingest.try_submit(item):
+            self._shed_count += 1
+            self._ingest.drain()  # preserve FIFO before applying inline
+            self._apply_add(*item)
 
     def drain(self):
         """Barrier: block until every enqueued ``add`` batch has been applied
         (and re-raise any ingest failure). Idempotent and cheap when idle."""
         if self._ingest is not None:
             self._ingest.drain()
+
+    @property
+    def ingest_high_water(self) -> int:
+        """Deepest async-ingest backlog observed (batches), incl. restored."""
+        live = self._ingest.high_water if self._ingest is not None else 0
+        return max(live, self._restored_high_water)
+
+    def ingest_stats(self) -> dict:
+        """Back-pressure telemetry for the async ingest queue."""
+        return {
+            "max_pending": self.max_pending,
+            "high_water": self.ingest_high_water,
+            "shed_count": self._shed_count,
+        }
 
     def _apply_add(self, lo, hi, cat, agg, mea, theta, beta2):
         """Synchronous ingest of one host-side batch (runs on the worker).
@@ -642,10 +686,13 @@ class Synopsis:
             "log_ls": np.array(np.asarray(self.params.log_ls)),
             "log_sigma2": np.array(np.asarray(self.params.log_sigma2)),
             "mu": np.array(np.asarray(self.params.mu)),
+            "ingest_high_water": np.asarray(self.ingest_high_water, np.int64),
         }
 
     def load_state_dict(self, state):
         self.drain()
+        if "ingest_high_water" in state:  # absent in pre-back-pressure dumps
+            self._restored_high_water = int(state["ingest_high_water"])
         n = state["lo"].shape[0]
         self.n = n
         self._lo[:n] = state["lo"]

@@ -39,23 +39,45 @@ class Ticket:
 class AqpService:
     """Synchronous microbatcher over one ``VerdictEngine``.
 
-    ``max_batch``: auto-flush threshold; ``target_rel_error``: default error
-    target applied to every flush (per the batched engine's per-query early
-    stopping); ``mesh``: optional device mesh for the sharded scan path.
+    ``max_batch``: auto-flush threshold; ``target_rel_error`` /
+    ``max_batches`` / ``stop_delta``: the error-budget contract applied to
+    every flush (per the batched engine's per-query early stopping);
+    ``mesh``: optional device mesh for the sharded scan path.
     """
 
     def __init__(self, engine, max_batch: int = 64,
-                 target_rel_error: Optional[float] = None, mesh=None):
-        self.engine = engine
+                 target_rel_error: Optional[float] = None, mesh=None,
+                 max_batches: Optional[int] = None,
+                 stop_delta: Optional[float] = None,
+                 result_wrapper=None):
+        # Accept either a raw VerdictEngine or a repro.verdict Session.
+        self.engine = getattr(engine, "engine", engine)
         self.max_batch = int(max_batch)
         self.target_rel_error = target_rel_error
-        self.executor = BatchExecutor(engine, mesh=mesh)
+        self.max_batches = max_batches
+        self.stop_delta = stop_delta
+        # Applied to every QueryResult before it lands on a ticket —
+        # Session.serve passes QueryAnswer.from_result so facade users get
+        # the same typed answers session.execute returns.
+        self.result_wrapper = result_wrapper
+        self.executor = BatchExecutor(self.engine, mesh=mesh)
         self._queue: List[tuple] = []  # (query, ticket) pairs
         self.flushes = 0
         self.last_stats: Optional[BatchStats] = None
 
+    @property
+    def pending(self) -> int:
+        """Queries waiting for the next flush."""
+        return len(self._queue)
+
     def submit(self, query: AggQuery) -> Ticket:
-        """Enqueue one query; auto-flushes when the microbatch is full."""
+        """Enqueue one query; auto-flushes when the microbatch is full.
+
+        Accepts an ``AggQuery`` or anything with ``.build()`` (the facade's
+        ``QueryBuilder``).
+        """
+        if not isinstance(query, AggQuery) and hasattr(query, "build"):
+            query = query.build()
         ticket = Ticket(self)
         self._queue.append((query, ticket))
         if len(self._queue) >= self.max_batch:
@@ -68,8 +90,13 @@ class AqpService:
             return []
         batch, self._queue = self._queue, []
         results = self.executor.execute_many(
-            [q for q, _ in batch], target_rel_error=self.target_rel_error
+            [q for q, _ in batch],
+            target_rel_error=self.target_rel_error,
+            max_batches=self.max_batches,
+            stop_delta=self.stop_delta,
         )
+        if self.result_wrapper is not None:
+            results = [self.result_wrapper(r) for r in results]
         for (_, ticket), res in zip(batch, results):
             ticket._result = res
             ticket._done = True

@@ -1,0 +1,42 @@
+"""Public driver-level API for the Database Learning engine.
+
+    import repro.verdict as vd
+
+    session = vd.connect(relation, vd.EngineConfig(sample_rate=0.1))
+    q = session.query().avg("v0").where(vd.between("x0", 2, 8)).group_by("c0")
+    print(session.explain(q))
+    answer = session.execute(q, vd.ErrorBudget(target_rel_error=0.02))
+    for partial in session.stream(q):           # online aggregation
+        print(partial.max_rel_error(), partial.final)
+
+See ``repro.verdict.session`` for the Session surface and the README's
+"Session API" section for the migration notes from raw ``VerdictEngine``
+dict cells.
+"""
+from repro.core.engine import EngineConfig
+from repro.verdict.answer import Cell, QueryAnswer
+from repro.verdict.query import (
+    QueryBuilder,
+    any_of,
+    between,
+    equals,
+    matches,
+    one_of,
+)
+from repro.verdict.session import ErrorBudget, PlanReport, Session, connect
+
+__all__ = [
+    "Cell",
+    "EngineConfig",
+    "ErrorBudget",
+    "PlanReport",
+    "QueryAnswer",
+    "QueryBuilder",
+    "Session",
+    "any_of",
+    "between",
+    "connect",
+    "equals",
+    "matches",
+    "one_of",
+]

@@ -1,0 +1,103 @@
+"""Typed answers for the public Session API.
+
+``Cell``/``QueryAnswer`` replace the engine-level ``List[dict]`` cells with
+frozen dataclasses; ``Cell.to_dict``/``from_dict`` round-trip bit-for-bit to
+the engine representation, so facade answers can always be checked against
+the engine's bitwise-parity oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.utils.stats import confidence_multiplier
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One output cell of an aggregate query.
+
+    group:    the group-by value tuple (empty when no group-by)
+    agg:      index of the aggregate within the query's select list
+    kind:     'AVG' | 'SUM' | 'COUNT'
+    estimate: the (possibly model-improved) answer
+    beta2:    its variance; ``error_bound(delta)`` is the ±bound at
+              confidence ``delta``
+    """
+
+    group: Tuple[int, ...]
+    agg: int
+    kind: str
+    estimate: float
+    beta2: float
+
+    def error_bound(self, delta: float = 0.95) -> float:
+        return float(confidence_multiplier(delta)) * float(np.sqrt(self.beta2))
+
+    def rel_error(self, delta: float = 0.95) -> float:
+        return self.error_bound(delta) / max(abs(self.estimate), 1e-9)
+
+    def to_dict(self) -> dict:
+        """The engine-level dict representation (bitwise round-trip)."""
+        return {
+            "group": self.group,
+            "agg": self.agg,
+            "kind": self.kind,
+            "estimate": self.estimate,
+            "beta2": self.beta2,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "Cell":
+        return Cell(
+            group=tuple(d["group"]),
+            agg=int(d["agg"]),
+            kind=str(d["kind"]),
+            estimate=d["estimate"],
+            beta2=d["beta2"],
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryAnswer:
+    """Typed result of one query through the Session facade.
+
+    ``final`` is False only for the intermediate refinements yielded by
+    ``Session.stream``. ``truncated_groups`` surfaces group-by cells dropped
+    by the planner's ``n_max`` cap (see ``SnippetPlan.truncated_groups``).
+    """
+
+    cells: Tuple[Cell, ...]
+    batches_used: int
+    tuples_scanned: int
+    supported: bool
+    unsupported_reason: Optional[str] = None
+    truncated_groups: int = 0
+    final: bool = True
+
+    @staticmethod
+    def from_result(result, final: bool = True) -> "QueryAnswer":
+        """Lift an engine ``QueryResult`` into the typed representation."""
+        return QueryAnswer(
+            cells=tuple(Cell.from_dict(c) for c in result.cells),
+            batches_used=result.batches_used,
+            tuples_scanned=result.tuples_scanned,
+            supported=result.supported,
+            unsupported_reason=result.unsupported_reason,
+            truncated_groups=result.truncated_groups,
+            final=final,
+        )
+
+    def max_rel_error(self, delta: float = 0.95) -> float:
+        return max((c.rel_error(delta) for c in self.cells), default=0.0)
+
+    @property
+    def value(self) -> float:
+        """Single-cell convenience: the lone estimate."""
+        if len(self.cells) != 1:
+            raise ValueError(
+                f"answer has {len(self.cells)} cells; use .cells directly"
+            )
+        return self.cells[0].estimate

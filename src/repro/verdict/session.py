@@ -1,0 +1,247 @@
+"""The public Session facade: connect → query → explain/stream/execute.
+
+VerdictDB-style driver API over the engine/plan core: ``connect`` binds a
+relation (plus an ``EngineConfig``) to a ``Session``; queries are built with
+the typed ``QueryBuilder``; per-call accuracy/latency contracts are
+``ErrorBudget``s (BlinkDB-style); ``explain`` reports the plan the engine
+would run (support verdict, snippet counts, dedup, predicted shape buckets);
+``stream`` yields per-batch refined answers (the online-aggregation loop
+with the full improve/validate/record lifecycle); answers are typed
+``QueryAnswer``/``Cell`` dataclasses. Everything routes through the same
+``repro.aqp.plan`` lifecycle the raw engine uses, so facade answers are
+bit-for-bit the engine's.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Union
+
+from repro.aqp import queries as Q
+from repro.aqp.batch import BatchExecutor, BatchStats
+from repro.aqp.plan import (
+    PhysicalPlan,
+    plain_eval,
+    plan_workload,
+    replay_rounds,
+)
+from repro.aqp.relation import Relation
+from repro.core.engine import EngineConfig, VerdictEngine
+from repro.core.synopsis import MIN_Q_BUCKET
+from repro.core.types import bucket_size
+from repro.verdict.answer import QueryAnswer
+from repro.verdict.query import QueryBuilder
+
+QueryLike = Union[Q.AggQuery, QueryBuilder]
+
+
+@dataclasses.dataclass(frozen=True)
+class ErrorBudget:
+    """Per-call accuracy/latency contract (BlinkDB-style).
+
+    target_rel_error: stop as soon as every cell's relative error bound (at
+        confidence ``delta``) is below this; None scans the full budget.
+    max_batches: hard cap on sample batches (None: the engine's budget).
+    delta: confidence level of the stopping bound (None: the engine's
+        ``report_delta``).
+    """
+
+    target_rel_error: Optional[float] = None
+    max_batches: Optional[int] = None
+    delta: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    """What ``Session.explain`` saw: the plan without running the scan.
+
+    ``q_buckets``/``fill_buckets``: predicted power-of-two serve tiles per
+    aggregate-function key ``(agg, measure)`` — the (Q-bucket, fill-bucket)
+    program the improve dispatch would compile/reuse. ``dedup_ratio`` is the
+    within-query snippet reuse (shared FREQ rows across SUM/COUNT cells).
+    """
+
+    supported: bool
+    unsupported_reason: Optional[str]
+    n_cells: int
+    n_groups: int
+    truncated_groups: int
+    n_snippets: int
+    n_snippets_unique: int
+    dedup_ratio: float
+    q_buckets: dict
+    fill_buckets: dict
+
+    def __str__(self) -> str:
+        head = ("supported" if self.supported
+                else f"raw-only ({self.unsupported_reason})")
+        lines = [
+            f"plan: {head}",
+            f"  cells={self.n_cells} groups={self.n_groups}"
+            f" truncated_groups={self.truncated_groups}",
+            f"  snippets={self.n_snippets} unique={self.n_snippets_unique}"
+            f" dedup={self.dedup_ratio:.2f}x",
+        ]
+        for key in sorted(self.q_buckets):
+            lines.append(
+                f"  agg_key={key}: Q-bucket={self.q_buckets[key]}"
+                f" fill-bucket={self.fill_buckets[key]}"
+            )
+        return "\n".join(lines)
+
+
+def connect(relation: Relation,
+            config: Optional[EngineConfig] = None) -> "Session":
+    """Open a Session over a relation (the driver-level entry point)."""
+    return Session(relation, config)
+
+
+class Session:
+    """One connection's worth of query/learn state over a relation.
+
+    Wraps a ``VerdictEngine`` plus a persistent ``BatchExecutor`` so
+    workload-level fusion stats survive across calls (``last_stats``).
+    """
+
+    def __init__(self, relation: Relation,
+                 config: Optional[EngineConfig] = None, mesh=None):
+        self.engine = VerdictEngine(relation, config)
+        self._executor = BatchExecutor(self.engine, mesh=mesh)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def schema(self):
+        return self.engine.schema
+
+    @property
+    def config(self) -> EngineConfig:
+        return self.engine.config
+
+    @property
+    def last_stats(self) -> BatchStats:
+        """Fusion accounting of the most recent execute/execute_many call."""
+        return self._executor.stats
+
+    # --------------------------------------------------------------- queries
+    def query(self) -> QueryBuilder:
+        """Start a typed query: ``session.query().avg("v0").where(...)``."""
+        return QueryBuilder(self.engine.schema)
+
+    @staticmethod
+    def _lower(q: QueryLike) -> Q.AggQuery:
+        return q.build() if isinstance(q, QueryBuilder) else q
+
+    # --------------------------------------------------------------- execute
+    def execute(self, q: QueryLike,
+                budget: Optional[ErrorBudget] = None) -> QueryAnswer:
+        return self.execute_many([q], budget=budget)[0]
+
+    def execute_many(self, queries: Sequence[QueryLike],
+                     budget: Optional[ErrorBudget] = None
+                     ) -> List[QueryAnswer]:
+        """Answer a workload in one fused scan (see ``repro.aqp.batch``)."""
+        budget = budget or ErrorBudget()
+        results = self._executor.execute_many(
+            [self._lower(q) for q in queries],
+            target_rel_error=budget.target_rel_error,
+            max_batches=budget.max_batches,
+            stop_delta=budget.delta,
+        )
+        return [QueryAnswer.from_result(r) for r in results]
+
+    # --------------------------------------------------------------- explain
+    def explain(self, q: QueryLike) -> PlanReport:
+        """Plan a query without scanning past the group-discovery probe."""
+        eng = self.engine
+        wp = plan_workload(eng, [self._lower(q)])
+        lp = wp.logical[0]
+        if lp.plan is None:
+            return PlanReport(True, None, 0, 0, 0, 0, 0, 1.0, {}, {})
+        n_total = lp.plan.snippets.n
+        n_unique = wp.stats.n_snippets_fused
+        q_buckets, fill_buckets = {}, {}
+        for key, rows in eng._group_rows(lp.plan.snippets):
+            q_buckets[key] = bucket_size(len(rows), MIN_Q_BUCKET)
+            syn = eng.synopses.get(key)
+            fill_buckets[key] = syn._fill_bucket() if syn is not None else 0
+        return PlanReport(
+            supported=lp.supported,
+            unsupported_reason=lp.reason,
+            n_cells=len(lp.plan.cells),
+            n_groups=len(lp.plan.groups),
+            truncated_groups=lp.truncated_groups,
+            n_snippets=n_total,
+            n_snippets_unique=n_unique,
+            dedup_ratio=wp.stats.dedup_ratio,
+            q_buckets=q_buckets,
+            fill_buckets=fill_buckets,
+        )
+
+    # ---------------------------------------------------------------- stream
+    def stream(self, q: QueryLike,
+               budget: Optional[ErrorBudget] = None
+               ) -> Iterator[QueryAnswer]:
+        """Online aggregation: yield a refined answer after every batch.
+
+        Each yielded ``QueryAnswer`` carries the improved (validated)
+        estimates after batches ``0..b``; the last one (``final=True``) is
+        bit-for-bit what ``execute`` under the same budget returns, and only
+        its raw answers are recorded into the synopsis. There is no second
+        lifecycle here: this is ``replay_rounds`` — the exact generator
+        ``replay_query``/``execute`` consume — surfaced round by round.
+        """
+        eng = self.engine
+        budget = budget or ErrorBudget()
+        wp = plan_workload(eng, [self._lower(q)])
+        lp = wp.logical[0]
+        phys = PhysicalPlan(
+            eng.batches,
+            wp.fused if lp.supported else wp.fused_raw,
+            self._executor._eval if lp.supported else plain_eval,
+        )
+        for res, final in replay_rounds(
+            eng, lp, phys,
+            target_rel_error=budget.target_rel_error,
+            max_batches=budget.max_batches,
+            stop_delta=budget.delta,
+            every_batch=True,
+        ):
+            yield QueryAnswer.from_result(res, final=final)
+
+    # ------------------------------------------------------------- lifecycle
+    def refit(self, **kw):
+        """Offline learning pass (Algorithm 1); drains async ingest."""
+        self.engine.refit(**kw)
+
+    def drain(self):
+        """Barrier over async synopsis ingest (snapshot/refit boundaries)."""
+        self.engine.drain()
+
+    def ingest_stats(self) -> dict:
+        """Per-synopsis async-ingest back-pressure telemetry."""
+        return self.engine.ingest_stats()
+
+    def save(self, manager, step: int):
+        """Checkpoint the learned synopses through a CheckpointManager."""
+        self.engine.save_synopses(manager, step)
+
+    def load(self, manager, step: Optional[int] = None):
+        """Restore learned synopses; the session resumes smarter."""
+        return self.engine.load_synopses(manager, step)
+
+    def serve(self, max_batch: int = 64,
+              budget: Optional[ErrorBudget] = None):
+        """A microbatching ``AqpService`` front over this session's engine.
+
+        The full ``budget`` contract (target, max_batches, delta) applies to
+        every flush, builders are accepted, and tickets resolve to the same
+        typed ``QueryAnswer`` the session's own execute returns.
+        """
+        from repro.serving.aqp import AqpService
+
+        budget = budget or ErrorBudget()
+        return AqpService(self.engine, max_batch=max_batch,
+                          target_rel_error=budget.target_rel_error,
+                          mesh=self._executor.mesh,  # keep the sharded scan
+                          max_batches=budget.max_batches,
+                          stop_delta=budget.delta,
+                          result_wrapper=QueryAnswer.from_result)

@@ -116,7 +116,7 @@ def test_eval_partials_kernel_on_deduped_fused_batches(cat_sizes, n_rows):
     cross-query DEDUPED snippet batches, zero-categorical-columns case, and
     snippet/tuple counts that are not multiples of the kernel tiles."""
     from repro.aqp import workload as W
-    from repro.aqp.batch import _Deduper
+    from repro.aqp.plan import SnippetInterner
     from repro.aqp.executor import eval_partials
     from repro.aqp.queries import decompose
     from repro.core.types import pad_snippets
@@ -126,7 +126,7 @@ def test_eval_partials_kernel_on_deduped_fused_batches(cat_sizes, n_rows):
     qs = W.make_workload(12, rel.schema, 20,
                          cat_pred_prob=0.4 if cat_sizes else 0.0)
     qs = qs + qs[:7]  # repeats: dedup has work to do
-    dedup = _Deduper(rel.schema)
+    dedup = SnippetInterner(rel.schema)
     for q in qs:
         dedup.intern(decompose(rel.schema, q).snippets)
     assert dedup.n < sum(decompose(rel.schema, q).snippets.n for q in qs)

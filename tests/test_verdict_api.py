@@ -1,0 +1,227 @@
+"""Public ``repro.verdict`` Session API: typed builder, explain, stream,
+ErrorBudget early-stop, and bitwise equivalence with engine-level execution."""
+import numpy as np
+import pytest
+
+import repro.verdict as vd
+from repro.aqp import workload as W
+from repro.aqp.queries import AggQuery, AggSpec, CatEq, NumRange, TextLike
+from repro.core.engine import EngineConfig, VerdictEngine
+from repro.verdict.answer import Cell
+
+
+@pytest.fixture(scope="module")
+def relation():
+    return W.make_relation(seed=0, n_rows=6_000, n_num=2, cat_sizes=(4,),
+                           n_measures=1, lengthscale=0.4, noise=0.2)
+
+
+def _cfg(**kw):
+    base = dict(sample_rate=0.15, n_batches=5, capacity=128, seed=0)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# ------------------------------------------------------------------ builder
+def test_builder_resolves_names(relation):
+    s = vd.connect(relation, _cfg())
+    q = (s.query().avg("v0").count()
+         .where(vd.between("x0", 2.0, 8.0), vd.equals("c0", 1))
+         .group_by("c0").build())
+    assert q == AggQuery(
+        aggs=(AggSpec("AVG", 0), AggSpec("COUNT", None)),
+        predicates=(NumRange(0, 2.0, 8.0), CatEq(0, 1)),
+        groupby=(0,),
+    )
+    # Unsupported constructs are representable and flagged, not rejected.
+    q2 = s.query().min("v0").where(vd.matches("%x%")).build()
+    assert q2.aggs[0].kind == "MIN"
+    assert isinstance(q2.predicates[0], TextLike)
+
+
+def test_builder_errors(relation):
+    s = vd.connect(relation, _cfg())
+    with pytest.raises(KeyError, match="nope"):
+        s.query().avg("nope").build()
+    with pytest.raises(KeyError, match="group-by"):
+        s.query().count().group_by("x9").build()
+    with pytest.raises(ValueError, match="no aggregates"):
+        s.query().build()
+    # equals() by bare index is ambiguous (numeric vs categorical dim) and
+    # must be rejected rather than silently guessed.
+    with pytest.raises(KeyError, match="ambiguous"):
+        s.query().count().where(vd.equals(0, 2.5)).build()
+
+
+# ----------------------------------------------------- execute equivalence
+def test_execute_matches_engine_bitwise_and_cell_roundtrip(relation):
+    """Facade answers are the engine's answers, typed: every Cell
+    round-trips to the engine dict representation bit for bit."""
+    qs = W.make_workload(1, relation.schema, 8,
+                         agg_kinds=("AVG", "COUNT", "SUM"), cat_pred_prob=0.3)
+    qs.append(AggQuery(aggs=(AggSpec("AVG", 0),),
+                       predicates=(TextLike("%a%"), NumRange(0, 2.0, 8.0))))
+    session = vd.connect(relation, _cfg())
+    engine = VerdictEngine(relation, _cfg())
+    answers = [session.execute(q) for q in qs]
+    results = [engine.execute(q) for q in qs]
+    for a, r in zip(answers, results):
+        assert a.supported == r.supported
+        assert a.batches_used == r.batches_used
+        assert a.tuples_scanned == r.tuples_scanned
+        assert a.unsupported_reason == r.unsupported_reason
+        assert [c.to_dict() for c in a.cells] == r.cells  # bitwise
+        for c, d in zip(a.cells, r.cells):
+            assert Cell.from_dict(d) == c  # round-trip
+    # execute_many through the facade matches too, in one fused scan.
+    s2 = vd.connect(relation, _cfg())
+    many = s2.execute_many(qs)
+    for a, r in zip(many, results):
+        assert [c.to_dict() for c in a.cells] == r.cells
+    assert s2.last_stats.n_queries == len(qs)
+    assert s2.last_stats.eval_calls > 0
+
+
+# ------------------------------------------------------------------ explain
+def test_explain_reports_plan(relation):
+    s = vd.connect(relation, _cfg())
+    q = (s.query().avg("v0").count()
+         .where(vd.between("x0", 2.0, 8.0)).group_by("c0"))
+    rep = s.explain(q)
+    assert rep.supported and rep.unsupported_reason is None
+    assert rep.n_groups == 4 and rep.truncated_groups == 0
+    assert rep.n_cells == 8  # (AVG, COUNT) x 4 groups
+    assert rep.n_snippets == rep.n_snippets_unique == 8
+    assert rep.dedup_ratio == 1.0
+    # Predicted serve tiles are powers of two >= the per-key row counts.
+    for key, qb in rep.q_buckets.items():
+        assert qb & (qb - 1) == 0 and qb >= 4
+    assert "supported" in str(rep)
+    # Nothing was learned or scanned beyond the group-discovery probe.
+    assert s.engine.synopses == {} or all(
+        syn.n == 0 for syn in s.engine.synopses.values())
+
+    bad = s.query().avg("v0").where(vd.matches("%x%"))
+    rep2 = s.explain(bad)
+    assert not rep2.supported and "textual" in rep2.unsupported_reason
+
+
+def test_truncated_groups_surfaced(relation):
+    """The planner's n_max cap is no longer silent: explain, the engine
+    result and the typed answer all report the dropped group-by cells."""
+    cfg = _cfg(n_max=2)
+    s = vd.connect(relation, cfg)
+    q = s.query().count().group_by("c0")
+    rep = s.explain(q)
+    assert rep.n_groups == 2 and rep.truncated_groups == 2
+    ans = s.execute(q)
+    assert len(ans.cells) == 2
+    assert ans.truncated_groups == 2
+    eng = VerdictEngine(relation, cfg)
+    res = eng.execute(q.build())
+    assert res.truncated_groups == 2 and res.plan.truncated_groups == 2
+
+
+# ------------------------------------------------------------------- stream
+def test_stream_refines_and_final_matches_execute(relation):
+    qs = W.make_workload(2, relation.schema, 3, agg_kinds=("AVG",),
+                         width_range=(0.2, 0.5), cat_pred_prob=0.0)
+    s_stream = vd.connect(relation, _cfg())
+    s_exec = vd.connect(relation, _cfg())
+    for q in qs:
+        partials = list(s_stream.stream(q))
+        direct = s_exec.execute(q)
+        assert len(partials) == s_stream.config.n_batches
+        assert [p.final for p in partials[:-1]] == [False] * (len(partials) - 1)
+        assert partials[-1].final
+        assert [c.to_dict() for c in partials[-1].cells] == \
+               [c.to_dict() for c in direct.cells]  # bitwise, state included
+        # Raw-answer refinement: scanning more batches helped at least once.
+        errs = [p.max_rel_error() for p in partials]
+        assert min(errs[1:]) <= errs[0]
+
+
+def test_stream_with_budget_early_stops_like_execute(relation):
+    budget = vd.ErrorBudget(target_rel_error=0.08)
+    s_stream = vd.connect(relation, _cfg())
+    s_exec = vd.connect(relation, _cfg())
+    q = W.make_workload(3, relation.schema, 1, agg_kinds=("AVG",),
+                        width_range=(0.3, 0.5), cat_pred_prob=0.0)[0]
+    partials = list(s_stream.stream(q, budget))
+    direct = s_exec.execute(q, budget)
+    assert partials[-1].batches_used == direct.batches_used
+    assert len(partials) == direct.batches_used  # stopped as soon as met
+    assert [c.to_dict() for c in partials[-1].cells] == \
+           [c.to_dict() for c in direct.cells]
+
+
+# -------------------------------------------------------------- ErrorBudget
+def test_error_budget_max_batches(relation):
+    s = vd.connect(relation, _cfg())
+    q = s.query().avg("v0").where(vd.between("x0", 1.0, 9.0))
+    a = s.execute(q, vd.ErrorBudget(max_batches=2))
+    assert a.batches_used == 2
+
+
+def test_error_budget_target_early_stop(relation):
+    s = vd.connect(relation, _cfg())
+    q = s.query().avg("v0").where(vd.between("x0", 0.5, 9.5)).build()
+    a = s.execute(q, vd.ErrorBudget(target_rel_error=0.05))
+    assert a.batches_used < s.config.n_batches
+    assert a.max_rel_error() <= 0.05
+    # No target: the full budget is spent.
+    b = s.execute(q)
+    assert b.batches_used == s.config.n_batches
+
+
+def test_error_budget_delta_monotone(relation):
+    """A stricter confidence level needs at least as many batches."""
+    q = AggQuery(aggs=(AggSpec("AVG", 0),),
+                 predicates=(NumRange(0, 1.0, 9.0),))
+    used = {}
+    for delta in (0.5, 0.995):
+        s = vd.connect(relation, _cfg())
+        a = s.execute(q, vd.ErrorBudget(target_rel_error=0.02, delta=delta))
+        used[delta] = a.batches_used
+    assert used[0.5] <= used[0.995]
+
+
+def test_online_answers_rides_the_shared_scan(relation):
+    """repro.aqp.online is a thin generator over PhysicalPlan: its raw
+    answers and partials equal a hand-rolled unpadded accumulation bitwise
+    (pad invariance of per-snippet partials)."""
+    from repro.aqp.executor import (Partials, estimates_from_partials,
+                                    eval_partials)
+    from repro.aqp.online import online_answers
+    from repro.aqp.queries import decompose
+
+    eng = VerdictEngine(relation, _cfg())
+    plan = decompose(relation.schema,
+                     AggQuery(aggs=(AggSpec("AVG", 0), AggSpec("COUNT"),),
+                              predicates=(NumRange(0, 2.0, 8.0),)))
+    outs = list(online_answers(eng.batches, plan.snippets))
+    assert len(outs) == eng.batches.n_batches
+    acc = Partials.zeros(plan.snippets.n)
+    for (raw, state), rows in zip(outs, eng.batches.batch_rows):
+        block = eng.batches.relation.take(rows)
+        acc = acc + eval_partials(block.num_normalized, block.cat,
+                                  block.measures, plan.snippets)
+        np.testing.assert_array_equal(np.asarray(state.partials.count),
+                                      np.asarray(acc.count))
+        np.testing.assert_array_equal(np.asarray(state.partials.sums),
+                                      np.asarray(acc.sums))
+        theta, beta2, _ = estimates_from_partials(acc, plan.snippets)
+        np.testing.assert_array_equal(np.asarray(raw.theta),
+                                      np.asarray(theta))
+        np.testing.assert_array_equal(np.asarray(raw.beta2),
+                                      np.asarray(beta2))
+    assert outs[-1][1].batches_used == eng.batches.n_batches
+
+
+def test_answer_value_convenience(relation):
+    s = vd.connect(relation, _cfg())
+    a = s.execute(s.query().count())
+    assert a.value == pytest.approx(relation.cardinality, rel=0.05)
+    grouped = s.execute(s.query().count().group_by("c0"))
+    with pytest.raises(ValueError):
+        grouped.value

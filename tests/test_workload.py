@@ -1,0 +1,55 @@
+"""Workload generators: the §8.6 power-law column-access scheme."""
+import numpy as np
+import pytest
+
+from repro.aqp import workload as W
+
+
+def test_power_law_probs_halving_chains_off_frequent_mass():
+    """§8.6: frequent columns uniform; every tail column is HALF its
+    predecessor, starting from half the per-frequent-column probability
+    (regression: the first tail probability used to be a hardcoded 0.5,
+    independent of the frequent-column mass)."""
+    probs = W.power_law_probs(10, 0.3)  # k = 3 frequent columns
+    assert probs.shape == (10,)
+    assert probs.sum() == pytest.approx(1.0)
+    # Frequent block is uniform.
+    np.testing.assert_allclose(probs[:3], probs[0])
+    # Tail: each column half the previous — INCLUDING the first tail column
+    # relative to the last frequent one.
+    for i in range(3, 10):
+        assert probs[i] == pytest.approx(probs[i - 1] / 2.0)
+    # Unnormalized masses are 1,1,1,1/2,1/4,... so the head holds most mass.
+    assert probs[:3].sum() > 0.5
+
+
+def test_power_law_probs_all_frequent_is_uniform():
+    probs = W.power_law_probs(6, 1.0)
+    np.testing.assert_allclose(probs, 1.0 / 6.0)
+
+
+def test_power_law_probs_minimum_one_frequent():
+    probs = W.power_law_probs(4, 0.0)  # k clamps to 1
+    assert probs[1] == pytest.approx(probs[0] / 2.0)
+    assert probs[3] == pytest.approx(probs[0] / 8.0)
+
+
+def test_power_law_column_empirical_distribution():
+    """Sampled column frequencies match the analytic scheme."""
+    rng = np.random.default_rng(0)
+    n_cols, frac = 8, 0.25  # k = 2
+    draws = np.array([W._power_law_column(rng, n_cols, frac)
+                      for _ in range(20_000)])
+    emp = np.bincount(draws, minlength=n_cols) / len(draws)
+    np.testing.assert_allclose(emp, W.power_law_probs(n_cols, frac),
+                               atol=0.01)
+
+
+def test_make_workload_still_deterministic():
+    """The fix is behavior-preserving for the default all-ones head, so
+    seeded workloads stay reproducible."""
+    sch = W.make_relation(seed=0, n_rows=100, n_num=3, cat_sizes=(4, 3),
+                          n_measures=1).schema
+    a = W.make_workload(7, sch, 10, frac_frequent=0.5)
+    b = W.make_workload(7, sch, 10, frac_frequent=0.5)
+    assert a == b
