@@ -23,10 +23,19 @@ import sys
 BASELINE = os.path.join(os.path.dirname(__file__), "baseline.json")
 
 
-def current_metrics(improve_report: str = "") -> dict:
+def current_metrics(improve_report: str = "", shard_report: str = "") -> dict:
     import batch_bench
 
     rows = dict(batch_bench.bench(n_queries=6, n_rows=2_000, n_batches=2))
+    if shard_report and os.path.exists(shard_report):
+        with open(shard_report) as f:
+            rep = json.load(f)
+        rows["shard/oracle_bitwise_equal"] = float(
+            rep["oracle"]["bitwise_equal"] and rep["oracle"]["state_equal"])
+    else:
+        import shard_bench
+
+        rows.update(dict(shard_bench.bench(smoke=True)[0]))
     if improve_report and os.path.exists(improve_report):
         # Reuse the already-run smoke's JSON artifact instead of paying the
         # jit compiles a second time (CI runs the bench right before us).
@@ -74,6 +83,9 @@ def update(rows: dict) -> dict:
         "improve/speedup_p50_n8": True,
         "improve/mixed_q_programs": False,
         "improve/oracle_bitwise_equal": True,
+        # Placement never changes answers: sharded-store answers and learned
+        # state must stay bitwise-equal to the local store.
+        "shard/oracle_bitwise_equal": True,
     }
     return {
         "tolerance": 0.25,
@@ -89,11 +101,13 @@ def main():
     ap.add_argument("--baseline", default=BASELINE)
     ap.add_argument("--improve-report", default="",
                     help="reuse this improve_bench JSON instead of re-running")
+    ap.add_argument("--shard-report", default="",
+                    help="reuse this shard_bench JSON instead of re-running")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current run")
     args = ap.parse_args()
     sys.path.insert(0, os.path.dirname(__file__))
-    rows = current_metrics(args.improve_report)
+    rows = current_metrics(args.improve_report, args.shard_report)
     if args.update:
         blob = update(rows)
         with open(args.baseline, "w") as f:

@@ -96,7 +96,7 @@ def table5_overhead():
         t0 = time.perf_counter()
         reps = 5
         for _ in range(reps):
-            syn = list(eng.synopses.values())[0]
+            syn = next(iter(eng.store.values()))
             from repro.core.types import RawAnswer
             plan_q = W.make_workload(6, rel.schema, 1, agg_kinds=("AVG",),
                                      cat_pred_prob=0.0)[0]
@@ -209,7 +209,7 @@ def fig9_model_validation():
     out = []
     for scale in (0.1, 1.0, 10.0):
         v, n = train_engines(rel, tq)
-        for syn in v.synopses.values():
+        for syn in v.store.values():
             syn.params = GPParams(
                 log_ls=syn.params.log_ls + float(np.log(scale)),
                 log_sigma2=syn.params.log_sigma2, mu=syn.params.mu)
@@ -239,7 +239,7 @@ def fig12_data_append():
             stats = estimate_append_stats(
                 np.asarray(rel.measures[:500]), np.asarray(extra.measures[:500]),
                 rel.cardinality, n_new)
-            for syn in v.synopses.values():
+            for syn in v.store.values():
                 syn.apply_append(stats)
         # Appendix D setting: the AQP engine samples the *updated* relation
         # (raw answers see the appended data); the adjustment covers the

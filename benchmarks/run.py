@@ -19,11 +19,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (batch_bench, improve_bench, kernels_bench,
-                            paper_tables, roofline_report)
+                            paper_tables, roofline_report, shard_bench)
 
     suites = {
         "batch": batch_bench.run,
         "improve": improve_bench.run,
+        "shard": shard_bench.run,
         "table3": paper_tables.table3_generality,
         "table4": paper_tables.table4_speedup_error,
         "table5": paper_tables.table5_overhead,

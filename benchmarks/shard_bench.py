@@ -1,0 +1,198 @@
+"""Learned-state plane throughput: LocalSynopsisStore vs ShardedSynopsisStore.
+
+Measures the placement seam introduced by the SynopsisStore redesign on the
+two store-side hot paths:
+
+  - ``improve_groups``: a mixed multi-key snippet batch improved through the
+    store's stacked dispatch (one fused program locally, one per shard when
+    sharded);
+  - ``record`` + ``drain``: async ingest of raw answers across every key,
+    then the full barrier (the sharded store waits on all shards
+    concurrently).
+
+Also re-runs the answer oracle through the store seam: a sharded-store
+engine must answer a workload bitwise-identically to a local-store engine —
+the acceptance property the regression gate pins (placement moves FLOPs,
+never values). On a single-device container the sharded store degenerates to
+one shard; run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the ``sharded-smoke`` CI job) for real multi-device placement.
+
+    PYTHONPATH=src python benchmarks/shard_bench.py [--smoke] [--out f.json]
+
+Prints ``name,value`` CSV rows plus one ``BENCH {json}`` line; ``--out``
+writes the same JSON to a file (uploaded as a CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.aqp import workload as W
+from repro.core.engine import EngineConfig, VerdictEngine
+from repro.core.store import LocalSynopsisStore, ShardedSynopsisStore
+from repro.core.types import AVG, FREQ, RawAnswer, Schema, make_snippets
+
+
+def _random_batch(rng, sch, n, agg=AVG, measure=0):
+    ranges = []
+    for _ in range(n):
+        r = {}
+        for d in range(sch.n_num):
+            a = rng.uniform(0, 0.6)
+            r[d] = (a, a + rng.uniform(0.05, 0.4))
+        ranges.append(r)
+    return make_snippets(sch, agg=agg, measure=measure, num_ranges=ranges)
+
+
+def _mixed_batch(rng, sch, n_per_key, n_measures):
+    """One snippet batch spanning every aggregate key (AVG per measure +
+    FREQ) — the shape the stacked/partitioned dispatch fuses."""
+    from repro.core.types import SnippetBatch
+
+    parts = [_random_batch(rng, sch, n_per_key, agg=AVG, measure=m)
+             for m in range(n_measures)]
+    parts.append(_random_batch(rng, sch, n_per_key, agg=FREQ))
+    return SnippetBatch.concat(parts)
+
+
+def _build_store(kind, sch, cfg):
+    if kind == "sharded":
+        return ShardedSynopsisStore(sch, cfg)
+    return LocalSynopsisStore(sch, cfg)
+
+
+def bench_store_paths(n_measures, fill, n_per_key, iters, seed=0):
+    """p50 improve_groups latency + record/drain throughput, both stores."""
+    rng = np.random.default_rng(seed)
+    sch = Schema(num_lo=(0.0, 0.0), num_hi=(1.0, 1.0), cat_sizes=(4,),
+                 n_measures=n_measures)
+    cfg = EngineConfig(capacity=max(2 * fill, 64))
+    out = {"n_keys": n_measures + 1, "fill": fill,
+           "devices": jax.device_count()}
+    for kind in ("local", "sharded"):
+        rngk = np.random.default_rng(seed + 1)
+        store = _build_store(kind, sch, cfg)
+        train = _mixed_batch(rngk, sch, fill, n_measures)
+        store.record(train, RawAnswer(rngk.normal(1.0, 0.3, train.n),
+                                      rngk.uniform(0.01, 0.05, train.n)))
+        store.drain()
+        new = _mixed_batch(rngk, sch, n_per_key, n_measures)
+        raw = RawAnswer(jnp.asarray(rngk.normal(1.0, 0.3, new.n)),
+                        jnp.asarray(np.full(new.n, 0.02)))
+        store.improve_groups(new, raw)  # warm the per-shard programs
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            imp = store.improve_groups(new, raw)
+            imp.theta.block_until_ready()
+            times.append((time.perf_counter() - t0) * 1e3)
+        p50 = float(np.percentile(times, 50))
+        # Pre-generate the ingest batches: the timed region measures
+        # record+drain, not host-side test-data construction.
+        batches = []
+        for _ in range(iters):
+            b = _mixed_batch(rngk, sch, 4, n_measures)
+            batches.append((b, RawAnswer(rngk.normal(1.0, 0.3, b.n),
+                                         rngk.uniform(0.01, 0.05, b.n))))
+        t0 = time.perf_counter()
+        for b, r in batches:
+            store.record(b, r)
+        store.drain()
+        ingest_s = time.perf_counter() - t0
+        out[kind] = {
+            "improve_p50_ms": p50,
+            "ingest_batches_per_sec": iters / max(ingest_s, 1e-9),
+            "drain_stats": store.ingest_stats(),
+        }
+    out["improve_sharded_over_local"] = (
+        out["local"]["improve_p50_ms"]
+        / max(out["sharded"]["improve_p50_ms"], 1e-9))
+    return out
+
+
+def bench_oracle_parity(n_queries, n_rows, seed=2):
+    """Sharded-store answers vs the local-store oracle, bit for bit."""
+    rel = W.make_relation(seed=seed, n_rows=n_rows, n_num=2, cat_sizes=(4,),
+                          n_measures=2, lengthscale=0.4, noise=0.2)
+    qs = W.make_workload(1, rel.schema, n_queries,
+                         agg_kinds=("AVG", "COUNT", "SUM"), cat_pred_prob=0.3)
+    cfg = dict(sample_rate=0.15, n_batches=4, capacity=256, seed=0)
+    local = VerdictEngine(rel, EngineConfig(**cfg))
+    shard = VerdictEngine(
+        rel, EngineConfig(**cfg),
+        store=lambda sch, c: ShardedSynopsisStore(sch, c))
+    r_local = local.execute_many(qs)
+    r_shard = shard.execute_many(qs)
+    equal = all(a.cells == b.cells and a.batches_used == b.batches_used
+                for a, b in zip(r_local, r_shard))
+    local.drain(), shard.drain()
+    local_sd = local.synopses_state_dict()
+    shard_sd = shard.synopses_state_dict()
+    state_equal = local_sd.keys() == shard_sd.keys()
+    for name, sd in local_sd.items():
+        other = shard_sd[name]
+        state_equal = state_equal and all(
+            np.array_equal(sd[k], other[k]) for k in sd if k != "shard")
+    return {"n_queries": n_queries, "bitwise_equal": bool(equal),
+            "state_equal": bool(state_equal),
+            "devices": jax.device_count()}
+
+
+def bench(smoke=False):
+    if smoke:
+        paths = bench_store_paths(n_measures=2, fill=32, n_per_key=8,
+                                  iters=20)
+        oracle = bench_oracle_parity(n_queries=6, n_rows=2_000)
+    else:
+        paths = bench_store_paths(n_measures=4, fill=128, n_per_key=16,
+                                  iters=40)
+        oracle = bench_oracle_parity(n_queries=20, n_rows=20_000)
+    report = {"paths": paths, "oracle": oracle}
+    rows = [
+        ("shard/improve_p50_local_ms", paths["local"]["improve_p50_ms"]),
+        ("shard/improve_p50_sharded_ms", paths["sharded"]["improve_p50_ms"]),
+        ("shard/improve_sharded_over_local",
+         paths["improve_sharded_over_local"]),
+        ("shard/ingest_local_batches_per_sec",
+         paths["local"]["ingest_batches_per_sec"]),
+        ("shard/ingest_sharded_batches_per_sec",
+         paths["sharded"]["ingest_batches_per_sec"]),
+        ("shard/oracle_bitwise_equal",
+         float(oracle["bitwise_equal"] and oracle["state_equal"])),
+    ]
+    return rows, report
+
+
+def run():
+    """Entry point for ``benchmarks.run`` suite registration."""
+    rows, _ = bench()
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, CI smoke: checks the path end-to-end")
+    ap.add_argument("--out", default="",
+                    help="write the BENCH JSON report to this file")
+    args = ap.parse_args()
+    rows, report = bench(smoke=args.smoke)
+    for name, val in rows:
+        print(f"{name},{val:.4g}")
+    blob = json.dumps(report)
+    print(f"BENCH {blob}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(blob + "\n")
+    if not (report["oracle"]["bitwise_equal"]
+            and report["oracle"]["state_equal"]):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

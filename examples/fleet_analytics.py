@@ -73,7 +73,13 @@ def main(smoke: bool = False):
         if wave == 0:
             session.refit(steps=10 if smoke else 50)
             print("  --- refit: engine has learned the diurnal pattern ---")
-    print(f"  ingest back-pressure: {session.ingest_stats()}")
+    st = session.stats()
+    print(f"  store: {st['store']['kind']} ({st['store']['n_keys']} aggregate "
+          f"keys over {st['store']['n_shards']} shard(s))")
+    for key, entry in st["store"]["keys"].items():
+        print(f"    {key}: fill={entry['n']}/{entry['capacity']} "
+              f"placement={entry['placement']} "
+              f"ingest_high_water={entry['ingest']['high_water']}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,89 @@
+"""Sharded learned state: one mesh drives the scan AND the synopsis store.
+
+Forces a multi-device CPU topology (8 fake host devices — the same trick the
+``sharded-smoke`` CI job uses), opens a ``repro.verdict`` Session with a
+mesh, and shows the placement seam end to end:
+
+  - ``explain`` reports, per aggregate key, which shard/device the learned
+    state lives on (before the key even exists);
+  - queries run the fused scan through ``shard_map``+psum over the mesh
+    while each key's synopsis model is committed to its assigned device;
+  - ``Session.stats()`` shows shard occupancy and ingest back-pressure;
+  - the checkpoint round-trip re-places the sharded state onto a SMALLER
+    device set (elastic re-scale) and keeps answering bit-for-bit.
+
+    PYTHONPATH=src python examples/sharded_store.py [--smoke]
+
+Note: the sharded scan shards the tuple axis, so sample batches must divide
+by the mesh size (rows * sample_rate / n_batches % n_devices == 0) — the
+synopsis store itself has no such constraint.
+"""
+import argparse
+import os
+import tempfile
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+import repro.verdict as vd  # noqa: E402
+from repro.aqp import workload as W  # noqa: E402
+from repro.ft.checkpoint import CheckpointManager  # noqa: E402
+
+
+def main(smoke: bool = False):
+    devices = jax.devices()
+    mesh = Mesh(np.array(devices), ("data",))
+    n_rows, n_queries = (8_000, 10) if smoke else (40_000, 30)
+    rel = W.make_relation(seed=0, n_rows=n_rows, n_num=2, cat_sizes=(4,),
+                          n_measures=2, lengthscale=0.4, noise=0.2)
+    # 8000*0.2/5 = 320 rows per sample batch — divisible by 8 devices.
+    cfg = vd.EngineConfig(sample_rate=0.2, n_batches=5, capacity=512)
+    session = vd.connect(rel, cfg, mesh=mesh)
+    print(f"mesh: {len(devices)} devices; store kind: "
+          f"{session.store.stats()['kind']}")
+
+    q = (session.query().avg("v0").avg("v1").count()
+         .where(vd.between("x0", 2.0, 8.0)).group_by("c0"))
+    print("\nexplain (note per-key placement before any state exists):")
+    print(session.explain(q))
+
+    queries = W.make_workload(1, rel.schema, n_queries,
+                              agg_kinds=("AVG", "COUNT", "SUM"),
+                              cat_pred_prob=0.3)
+    session.execute_many(queries)
+    session.refit(steps=10 if smoke else 40)
+    st = session.stats()
+    print("\nshard occupancy after the workload:")
+    for shard in st["store"]["shards"]:
+        print(f"  {shard['device']}: keys={shard['n_keys']} "
+              f"fill={shard['fill']}")
+    print(f"ingest back-pressure: "
+          f"{ {k: v['ingest']['high_water'] for k, v in st['store']['keys'].items()} }")
+
+    # Elastic re-placement: checkpoint the 8-way store, restore onto 2
+    # devices (the scan keeps the full mesh so only placement changes).
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=1)
+        session.save(mgr, step=1)
+        narrow = vd.Session(rel, cfg, mesh=mesh)
+        narrow.engine.store = vd.ShardedSynopsisStore(
+            rel.schema, cfg, devices=devices[:2])
+        narrow.load(mgr)
+        test_q = queries[: 3]
+        a = session.execute_many(test_q, vd.ErrorBudget(max_batches=2))
+        b = narrow.execute_many(test_q, vd.ErrorBudget(max_batches=2))
+        same = all(x.cells == y.cells for x, y in zip(a, b))
+        print(f"\ncheckpoint re-placed onto 2 devices; answers identical: {same}")
+        assert same
+    print("\nThe synopsis — not the data — is the asset: it now shards, "
+          "drains, and re-places like one.")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI: checks the path end-to-end")
+    main(**vars(ap.parse_args()))

@@ -24,12 +24,14 @@ to one engine:
    state transitions, in the same order, as query-at-a-time execution
    (which since the plan-IR refactor is literally a workload of one).
 
-Learning is asynchronous: ``_record`` enqueues raw answers on the synopsis'
-background ingest thread and ``execute_many`` returns without waiting for the
-covariance builds. Each replayed ``_improve`` drains only its own synopsis'
-pending batches (so the state transitions stay deterministic and identical to
-the sequential engine); a full barrier (``VerdictEngine.drain``) is only
-needed at snapshot/refit boundaries.
+Learning is asynchronous and placement-aware: ``replay_query`` records raw
+answers through the engine's ``SynopsisStore`` (``store.record``), which
+enqueues them on each synopsis' background ingest thread — per shard when the
+store is sharded — and ``execute_many`` returns without waiting for the
+covariance builds. Each replayed ``store.improve_groups`` drains only the
+involved synopses' pending batches (so the state transitions stay
+deterministic and identical to the sequential engine); a full barrier
+(``VerdictEngine.drain``) is only needed at snapshot/refit boundaries.
 
 Because the scan path pads the snippet axis to fixed tiles
 (``pad_snippets``), per-snippet partials are bitwise identical between the

@@ -21,7 +21,10 @@ split VerdictDB-style into a logical and a physical layer:
   for one logical plan against a physical plan. ``VerdictEngine.execute``,
   its raw-only path and ``BatchExecutor`` all call this one function, so the
   bitwise-parity guarantees pinned by ``tests/test_batch_executor.py`` hold
-  by construction instead of by mirroring.
+  by construction instead of by mirroring. Learned state is reached ONLY
+  through ``engine.store`` (the ``SynopsisStore`` protocol,
+  ``repro.core.store``): the lifecycle is placement-oblivious, so a local
+  and a mesh-sharded store replay identically.
 
 Because the scan pads the snippet axis to fixed tiles (``pad_snippets``),
 per-snippet partials are bitwise identical between any two fused sets that
@@ -330,7 +333,8 @@ def replay_rounds(
         raw = physical.raw_at(b, lp.rows)
         used = b + 1
         if cfg.learning:
-            improved = engine._improve(lp.plan.snippets, raw)
+            improved = engine.store.improve_groups(
+                lp.plan.snippets, raw, use_kernels=cfg.use_kernels)
         else:
             improved = ImprovedAnswer(
                 raw.theta, raw.beta2, raw.theta, raw.beta2,
@@ -347,7 +351,7 @@ def replay_rounds(
                and res.max_rel_error(stop_delta) <= target_rel_error)
         final = met or b == max_batches - 1
         if final and cfg.learning:
-            engine._record(lp.plan.snippets, raw)
+            engine.store.record(lp.plan.snippets, raw)
         yield res, final
         if final:
             return

@@ -11,20 +11,24 @@ Workflow per query:
   4. insert the final raw answers into the synopsis (the model learns from
      *raw* answers, never from its own outputs).
 
-The lifecycle itself lives in the shared plan IR (``repro.aqp.plan``):
-``execute(q)`` is literally ``execute_many([q])[0]``, so the engine holds
-only the synopsis state, the improvement/record hooks the replay calls into,
-and the sample-batch stream.
+The lifecycle itself lives in the shared plan IR (``repro.aqp.plan``) and
+ALL learned state lives behind the ``SynopsisStore`` protocol
+(``repro.core.store``): ``execute(q)`` is literally ``execute_many([q])[0]``,
+so the engine holds only the store, the engine-level config, and the
+sample-batch stream. Pass ``store=`` (an instance or a
+``(schema, config) -> SynopsisStore`` factory) to choose placement —
+``LocalSynopsisStore`` by default, ``ShardedSynopsisStore`` for
+per-aggregate-key placement over a mesh (``repro.verdict.connect`` wires
+this from its ``mesh=`` argument).
 
 ``learning=False`` turns the engine into the NoLearn baseline of §8.1.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.aqp import queries as Q
@@ -32,19 +36,18 @@ from repro.aqp.executor import eval_partials
 from repro.aqp.plan import QueryResult  # noqa: F401 — canonical home is the plan IR
 from repro.aqp.relation import Relation
 from repro.aqp.sampler import SampleBatches, build_sample
-from repro.core.synopsis import (
-    MIN_Q_BUCKET,
-    Synopsis,
-    _improve_stacked,
-    _pad_raw,
+from repro.core.store import (
+    LocalSynopsisStore,
+    SynopsisStore,
+    agg_key,
+    group_rows,
 )
+from repro.core.synopsis import MIN_FILL_BUCKET, MIN_Q_BUCKET, Synopsis
 from repro.core.types import (
-    AVG,
     ImprovedAnswer,
     RawAnswer,
     Schema,
     SnippetBatch,
-    bucket_size,
     pad_snippets,
 )
 
@@ -62,10 +65,20 @@ class EngineConfig:
     use_kernels: bool = False  # route hot paths through the Pallas kernels
     async_ingest: bool = True  # learn on the background ingest thread
     ingest_max_pending: int = 64  # back-pressure bound on pending ingest batches
+    # Smallest serve-path tiles (power-of-two ladder floors): fills/batches
+    # below these share one compiled program. Per-deployment knobs — the
+    # first step of the adaptive bucket policy (ROADMAP).
+    min_fill_bucket: int = MIN_FILL_BUCKET
+    min_q_bucket: int = MIN_Q_BUCKET
 
 
 class VerdictEngine:
-    def __init__(self, relation: Relation, config: Optional[EngineConfig] = None):
+    def __init__(
+        self,
+        relation: Relation,
+        config: Optional[EngineConfig] = None,
+        store=None,
+    ):
         self.relation = relation
         self.schema: Schema = relation.schema
         self.config = config or EngineConfig()
@@ -75,7 +88,16 @@ class VerdictEngine:
             n_batches=self.config.n_batches,
             seed=self.config.seed,
         )
-        self.synopses: Dict[Tuple[int, int], Synopsis] = {}
+        if store is None:
+            self.store: SynopsisStore = LocalSynopsisStore(
+                self.schema, self.config)
+        elif callable(store) and not isinstance(store, SynopsisStore):
+            # a (schema, config) -> SynopsisStore factory
+            self.store = store(self.schema, self.config)
+        else:
+            # an instance — SynopsisStore subclass or any duck-typed
+            # implementation of the store protocol
+            self.store = store
         self._eval_fn = eval_partials
         if self.config.use_kernels:
             from repro.kernels.range_mask_agg import ops as rma_ops
@@ -83,130 +105,48 @@ class VerdictEngine:
             self._eval_fn = rma_ops.eval_partials_kernel
 
     # ------------------------------------------------------------- synopses
+    @property
+    def synopses(self) -> Dict[tuple, Synopsis]:
+        """Deprecated: the raw key → ``Synopsis`` mapping.
+
+        The store is the only supported access path to learned state; this
+        shim survives for external callers and returns the store's live
+        mapping (reads and in-place synopsis mutation keep working).
+        """
+        warnings.warn(
+            "VerdictEngine.synopses is deprecated; go through "
+            "VerdictEngine.store (repro.core.store.SynopsisStore)",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.store.synopses
+
     def synopsis_for(self, agg: int, measure: int) -> Synopsis:
-        key = (int(agg), int(measure) if agg == AVG else 0)
-        if key not in self.synopses:
-            self.synopses[key] = Synopsis(
-                self.schema,
-                capacity=self.config.capacity,
-                delta_v=self.config.delta_v,
-                async_ingest=self.config.async_ingest,
-                max_pending=self.config.ingest_max_pending,
-            )
-        return self.synopses[key]
+        return self.store.for_key(agg_key(agg, measure))
 
     def drain(self):
-        """Barrier over every synopsis' async ingest queue.
-
-        Call at snapshot/refit boundaries; serving itself drains lazily (each
-        ``improve`` waits only for its own synopsis' pending batches).
-        """
-        for syn in self.synopses.values():
-            syn.drain()
+        """Barrier over the store's async ingest (snapshot/refit boundary)."""
+        self.store.drain()
 
     def refit(self, steps: int = 150, lr: float = 0.1, learn_sigma: bool = False):
         """Offline learning pass (paper Algorithm 1). Drains async ingest."""
-        for syn in self.synopses.values():
-            syn.refit(steps=steps, lr=lr, learn_sigma=learn_sigma)
+        self.store.refit(steps=steps, lr=lr, learn_sigma=learn_sigma)
 
     def ingest_stats(self) -> Dict[str, dict]:
-        """Per-synopsis async-ingest back-pressure telemetry."""
-        return {
-            f"{agg}_{mea}": self.synopses[(agg, mea)].ingest_stats()
-            for (agg, mea) in sorted(self.synopses)
-        }
+        """Per-synopsis async-ingest back-pressure telemetry (structured
+        ``"agg<k>-measure<m>"`` keys; see ``repro.core.store.state_key``)."""
+        return self.store.ingest_stats()
 
     # ------------------------------------------------------------ improve
-    def _group_rows(self, snippets: SnippetBatch):
-        """(key, row-index array) per aggregate-function group, in key order."""
-        agg = np.asarray(snippets.agg)
-        mea = np.asarray(snippets.measure)
-        keys = sorted({(int(a), int(m) if a == AVG else 0)
-                       for a, m in zip(agg, mea)})
-        out = []
-        for key in keys:
-            rows = np.where(
-                (agg == key[0]) & ((mea == key[1]) if key[0] == AVG else True)
-            )[0]
-            out.append((key, rows))
-        return out
+    _group_rows = staticmethod(group_rows)  # back-compat alias
 
     def _improve(self, snippets: SnippetBatch, raw: RawAnswer) -> ImprovedAnswer:
-        """Per-aggregate-function improvement, scattered back to query order.
-
-        The per-key Python loop is fused into ONE stacked jitted dispatch:
-        every group's (state, new-snippets, raw answers) is padded to a shared
-        (Q-bucket, fill-bucket) tile and improved by a single vmapped program
-        (bitwise equal per group to the single-synopsis path). With
-        ``use_kernels=True`` each group instead routes through the
-        ``gp_batch_infer`` Pallas kernel, whose 128-wide MXU tiling is the
-        TPU-side equivalent of the stacking.
-        """
-        theta = np.asarray(raw.theta)
-        beta2 = np.asarray(raw.beta2)
-        out_theta = np.array(theta)
-        out_beta2 = np.array(beta2)
-        accepted = np.zeros(theta.shape[0], dtype=bool)
-        groups = []
-        for key, rows in self._group_rows(snippets):
-            syn = self.synopsis_for(*key)
-            syn.drain()
-            if syn.n == 0:
-                continue  # Theorem 1 equality case: raw passes through
-            groups.append((syn, rows))
-        if groups and (self.config.use_kernels or len(groups) == 1):
-            for syn, rows in groups:
-                sub = snippets[jnp.asarray(rows)]
-                imp = syn.improve(
-                    sub,
-                    RawAnswer(jnp.asarray(theta[rows]), jnp.asarray(beta2[rows])),
-                    use_kernel=self.config.use_kernels,
-                )
-                out_theta[rows] = np.asarray(imp.theta)
-                out_beta2[rows] = np.asarray(imp.beta2)
-                accepted[rows] = np.asarray(imp.accepted)
-        elif groups:
-            qb = bucket_size(max(len(rows) for _, rows in groups), MIN_Q_BUCKET)
-            fb = max(syn._fill_bucket() for syn, _ in groups)
-            states = [syn._padded_state(fb) for syn, _ in groups]
-            news, raw_ts, raw_bs = [], [], []
-            for syn, rows in groups:
-                news.append(pad_snippets(snippets[jnp.asarray(rows)], qb))
-                raw_ts.append(_pad_raw(jnp.asarray(theta[rows]), qb, 0.0))
-                raw_bs.append(_pad_raw(jnp.asarray(beta2[rows]), qb, 1.0))
-            stack = lambda *xs: jnp.stack(xs)  # noqa: E731
-            th_s, b2_s, acc_s = _improve_stacked(
-                jax.tree.map(stack, *[s[0] for s in states]),
-                jnp.stack([s[1] for s in states]),
-                jnp.stack([s[2] for s in states]),
-                jnp.stack([s[3] for s in states]),
-                jax.tree.map(stack, *[syn.params for syn, _ in groups]),
-                jax.tree.map(stack, *news),
-                jnp.stack(raw_ts),
-                jnp.stack(raw_bs),
-                groups[0][0].delta_v,
-            )
-            for g, (syn, rows) in enumerate(groups):
-                k = len(rows)
-                out_theta[rows] = np.asarray(th_s[g, :k])
-                out_beta2[rows] = np.asarray(b2_s[g, :k])
-                accepted[rows] = np.asarray(acc_s[g, :k])
-        return ImprovedAnswer(
-            theta=jnp.asarray(out_theta),
-            beta2=jnp.asarray(out_beta2),
-            raw_theta=raw.theta,
-            raw_beta2=raw.beta2,
-            accepted=jnp.asarray(accepted),
-        )
+        """Back-compat hook: the improvement lives in the store now."""
+        return self.store.improve_groups(
+            snippets, raw, use_kernels=self.config.use_kernels)
 
     def _record(self, snippets: SnippetBatch, raw: RawAnswer):
-        """Enqueue the final raw answers for learning (async per synopsis)."""
-        theta = np.asarray(raw.theta)
-        beta2 = np.asarray(raw.beta2)
-        for key, rows in self._group_rows(snippets):
-            syn = self.synopsis_for(*key)
-            sub = snippets[jnp.asarray(rows)]
-            syn.add(sub, theta[rows], beta2[rows])
+        """Back-compat hook: recording lives in the store now."""
+        self.store.record(snippets, raw)
 
     # ------------------------------------------------------------- groups
     def _discover_groups(self, q: Q.AggQuery):
@@ -309,36 +249,31 @@ class VerdictEngine:
 
     # -------------------------------------------------------------- persist
     def synopses_state_dict(self) -> Dict[str, dict]:
-        """Host snapshot of every synopsis, keyed ``"<agg>_<measure>"``.
-
-        Drains async ingest first (via ``Synopsis.state_dict``) and returns
-        copies, so the snapshot is stable across later queries — the pytree
-        ``repro.ft.checkpoint`` persists across process restarts.
-        """
-        return {
-            f"{agg}_{mea}": self.synopses[(agg, mea)].state_dict()
-            for (agg, mea) in sorted(self.synopses)
-        }
+        """Host snapshot of the store, keyed ``"agg<k>-measure<m>"`` with a
+        ``shard`` tag per entry (see ``SynopsisStore.state_dict``)."""
+        return self.store.state_dict()
 
     def load_synopses_state_dict(self, state: Dict[str, dict]):
-        """Restore synopses saved by ``synopses_state_dict`` (rebuilds models)."""
-        for key, sd in state.items():
-            agg, mea = (int(x) for x in key.split("_"))
-            self.synopsis_for(agg, mea).load_state_dict(sd)
+        """Restore a store snapshot (accepts legacy ``"<agg>_<measure>"``
+        keys from pre-store checkpoints; placement is re-derived by the
+        current store's policy, so the snapshot re-places onto any mesh)."""
+        self.store.load_state_dict(state)
 
     def save_synopses(self, manager, step: int):
         """Checkpoint the learned synopses through a ``CheckpointManager``."""
-        manager.save(step, self.synopses_state_dict(),
+        manager.save(step, self.store.state_dict(),
                      extra={"kind": "verdict-synopses"})
 
     def load_synopses(self, manager, step: Optional[int] = None):
         """Restore synopses from a ``CheckpointManager`` checkpoint.
 
         This is what makes the engine smarter across process restarts: a new
-        process pays zero queries to recover everything past sessions learned.
+        process pays zero queries to recover everything past sessions learned
+        — including re-placing a sharded checkpoint onto whatever devices
+        this process' store spans.
         """
         state, extra = manager.restore_blind(step)
-        self.load_synopses_state_dict(state)
+        self.store.load_state_dict(state)
         return extra
 
     # -------------------------------------------------------------- batched

@@ -1,0 +1,462 @@
+"""SynopsisStore: the placement-aware home of ALL learned state.
+
+The paper's premise is that the synopsis — not the raw data — is the asset
+that grows ("processing more queries should continuously enhance our
+knowledge of the underlying distribution"). This module makes that asset a
+first-class, *placeable* component: the query lifecycle (``repro.aqp.plan``)
+talks to an abstract ``SynopsisStore`` and never to raw ``Synopsis`` dicts,
+mirroring the storage/optimizer split in BlinkDB and the engine-agnostic
+layering of VerdictDB (PAPERS.md).
+
+Store protocol (every access path to learned state):
+
+- ``for_key(key)`` / ``get(key)`` — per-aggregate-key synopsis lookup,
+  created on demand with the store's placement policy;
+- ``improve_groups(snippets, raw)`` — the per-aggregate-key improvement of a
+  mixed snippet batch, scattered back to query order (Algorithm 2 lines
+  3-7), fused into one stacked jitted dispatch per *dispatch set*;
+- ``record(snippets, raw)`` — enqueue final raw answers for learning
+  (async per synopsis);
+- ``drain`` / ``refit`` / ``ingest_stats`` — ingest barrier, offline
+  learning (Algorithm 1), back-pressure telemetry;
+- ``state_dict`` / ``load_state_dict`` — structured-key, shard-tagged
+  checkpoint payloads (see ``state_key``); a checkpoint written by one
+  placement can be re-placed onto a different one.
+
+Two implementations ship:
+
+- ``LocalSynopsisStore`` — everything on the default device; bitwise
+  identical to the historical ``VerdictEngine``-internal dict, and the
+  default.
+- ``ShardedSynopsisStore`` — per-aggregate-key placement over the devices of
+  a JAX mesh (``jax.device_put``): each key's serve buffers and incremental
+  Sigma^{-1} chain live on its assigned device, ingest threads are per
+  synopsis (hence per shard), ``drain`` waits on all shards concurrently,
+  and the stacked improve dispatch partitions into one fused program per
+  device. Answers are bitwise-equal to the local store on identical
+  backends (all forced-host CPU devices share one backend; pinned by
+  ``tests/test_synopsis_store.py``), because the stacked dispatch is itself
+  bitwise-equal per group to the per-synopsis path.
+
+Invariant enforced across the codebase (tripwire-tested): no module outside
+this file constructs or indexes the raw ``Dict[AggKey, Synopsis]`` directly —
+``VerdictEngine.synopses`` survives only as a deprecated property shim over
+``store.synopses``.
+"""
+from __future__ import annotations
+
+import re
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.synopsis import Synopsis, _improve_stacked, _pad_raw
+from repro.core.types import (
+    AVG,
+    ImprovedAnswer,
+    RawAnswer,
+    SnippetBatch,
+    bucket_size,
+    pad_snippets,
+)
+
+AggKey = Tuple[int, int]
+
+_STATE_KEY_RE = re.compile(r"^agg(\d+)-measure(\d+)$")
+
+
+def agg_key(agg: int, measure: int) -> AggKey:
+    """Canonical aggregate-function key: (agg, measure), FREQ collapses
+    measure to 0 (frequency snippets are measure-oblivious, paper §2.3)."""
+    agg = int(agg)
+    return (agg, int(measure) if agg == AVG else 0)
+
+
+def state_key(key: AggKey) -> str:
+    """Structured checkpoint key for one aggregate-function synopsis.
+
+    Replaces the historical ``"{agg}_{measure}"`` format whose loader
+    round-tripped through ``str.split("_")``; ``parse_state_key`` still
+    accepts the legacy form so old checkpoints keep restoring.
+    """
+    return f"agg{key[0]}-measure{key[1]}"
+
+
+def parse_state_key(name: str) -> AggKey:
+    """Inverse of ``state_key``; accepts legacy ``"<agg>_<measure>"`` keys."""
+    m = _STATE_KEY_RE.match(name)
+    if m:
+        return (int(m.group(1)), int(m.group(2)))
+    agg, sep, mea = name.partition("_")
+    if sep and agg.isdigit() and mea.isdigit():  # pre-store checkpoints
+        return (int(agg), int(mea))
+    raise ValueError(f"unrecognized synopsis state key: {name!r}")
+
+
+def group_rows(snippets: SnippetBatch) -> List[Tuple[AggKey, np.ndarray]]:
+    """(key, row-index array) per aggregate-function group, in key order."""
+    agg = np.asarray(snippets.agg)
+    mea = np.asarray(snippets.measure)
+    keys = sorted({agg_key(a, m) for a, m in zip(agg, mea)})
+    out = []
+    for key in keys:
+        rows = np.where(
+            (agg == key[0]) & ((mea == key[1]) if key[0] == AVG else True)
+        )[0]
+        out.append((key, rows))
+    return out
+
+
+class SynopsisStore:
+    """Base store: local placement plus all placement-oblivious machinery.
+
+    Subclasses override the placement hooks (``shard_index``/``device_for``/
+    ``describe_placement``), the dispatch partition (``_dispatch_sets``) and
+    optionally ``drain``; everything else — lookup, improvement math,
+    recording, refit, persistence — is shared, so the two implementations
+    cannot drift apart semantically.
+    """
+
+    kind = "local"
+
+    def __init__(self, schema, config):
+        self.schema = schema
+        self.config = config
+        self._synopses: Dict[AggKey, Synopsis] = {}
+
+    # ------------------------------------------------------------ mapping
+    @property
+    def synopses(self) -> Dict[AggKey, Synopsis]:
+        """The live key → Synopsis mapping (read-mostly; the backing of the
+        deprecated ``VerdictEngine.synopses`` shim)."""
+        return self._synopses
+
+    def keys(self):
+        return self._synopses.keys()
+
+    def values(self):
+        return self._synopses.values()
+
+    def items(self):
+        return self._synopses.items()
+
+    def get(self, key: AggKey) -> Optional[Synopsis]:
+        return self._synopses.get(key)
+
+    def __len__(self) -> int:
+        return len(self._synopses)
+
+    def __contains__(self, key: AggKey) -> bool:
+        return key in self._synopses
+
+    def __iter__(self) -> Iterator[AggKey]:
+        return iter(self._synopses)
+
+    # ---------------------------------------------------------- placement
+    def shard_index(self, key: AggKey) -> int:
+        """Deterministic shard assignment for ``key`` (0 when unsharded).
+
+        A pure function of (key, placement width) — never of insertion
+        order — so a checkpoint written by any store re-places identically
+        on load, and ``Session.explain`` can report assignments for keys
+        that do not exist yet.
+        """
+        return 0
+
+    def device_for(self, key: AggKey):
+        """Device the key's synopsis lives on (None: default device)."""
+        return None
+
+    def describe_placement(self, key: AggKey) -> str:
+        return "local"
+
+    def placement(self) -> Dict[AggKey, str]:
+        """Key → human-readable placement for every existing synopsis."""
+        return {k: self.describe_placement(k) for k in sorted(self._synopses)}
+
+    # -------------------------------------------------------------- lookup
+    def for_key(self, key: AggKey) -> Synopsis:
+        """The synopsis for one aggregate-function key, created on demand
+        with the store's placement policy."""
+        syn = self._synopses.get(key)
+        if syn is None:
+            cfg = self.config
+            syn = Synopsis(
+                self.schema,
+                capacity=cfg.capacity,
+                delta_v=cfg.delta_v,
+                async_ingest=cfg.async_ingest,
+                max_pending=cfg.ingest_max_pending,
+                min_fill_bucket=cfg.min_fill_bucket,
+                min_q_bucket=cfg.min_q_bucket,
+                device=self.device_for(key),
+            )
+            self._synopses[key] = syn
+        return syn
+
+    # ------------------------------------------------------------- improve
+    def _dispatch_sets(self, groups: Sequence[tuple]) -> List[List[tuple]]:
+        """Partition improvable ``(key, synopsis, rows)`` groups into
+        stacked-dispatch sets.
+
+        Local placement fuses everything into ONE stacked program; sharded
+        placement yields one set per device (states on different devices
+        cannot be stacked into one dispatch).
+        """
+        return [list(groups)] if groups else []
+
+    def improve_groups(self, snippets: SnippetBatch, raw: RawAnswer,
+                       use_kernels: bool = False) -> ImprovedAnswer:
+        """Per-aggregate-key improvement, scattered back to query order.
+
+        Within each dispatch set the per-key Python loop is fused into ONE
+        stacked jitted program: every group's (state, new-snippets, raw
+        answers) is padded to a shared (Q-bucket, fill-bucket) tile and
+        improved by a single vmapped dispatch — bitwise equal per group to
+        the single-synopsis path, which is what makes local and sharded
+        placements answer-equivalent. With ``use_kernels=True`` each group
+        instead routes through the ``gp_batch_infer`` Pallas kernel, whose
+        128-wide MXU tiling is the TPU-side equivalent of the stacking.
+        """
+        theta = np.asarray(raw.theta)
+        beta2 = np.asarray(raw.beta2)
+        out_theta = np.array(theta)
+        out_beta2 = np.array(beta2)
+        accepted = np.zeros(theta.shape[0], dtype=bool)
+        groups = []
+        for key, rows in group_rows(snippets):
+            syn = self.for_key(key)
+            syn.drain()
+            if syn.n == 0:
+                continue  # Theorem 1 equality case: raw passes through
+            groups.append((key, syn, rows))
+        for dispatch in self._dispatch_sets(groups):
+            if use_kernels or len(dispatch) == 1:
+                for _, syn, rows in dispatch:
+                    sub = snippets[jnp.asarray(rows)]
+                    imp = syn.improve(
+                        sub,
+                        RawAnswer(jnp.asarray(theta[rows]),
+                                  jnp.asarray(beta2[rows])),
+                        use_kernel=use_kernels,
+                    )
+                    out_theta[rows] = np.asarray(imp.theta)
+                    out_beta2[rows] = np.asarray(imp.beta2)
+                    accepted[rows] = np.asarray(imp.accepted)
+                continue
+            qb = bucket_size(max(len(rows) for _, _, rows in dispatch),
+                             self.config.min_q_bucket)
+            fb = max(syn._fill_bucket() for _, syn, _ in dispatch)
+            states = [syn._padded_state(fb) for _, syn, _ in dispatch]
+            news, raw_ts, raw_bs = [], [], []
+            for _, syn, rows in dispatch:
+                news.append(pad_snippets(snippets[jnp.asarray(rows)], qb))
+                raw_ts.append(_pad_raw(jnp.asarray(theta[rows]), qb, 0.0))
+                raw_bs.append(_pad_raw(jnp.asarray(beta2[rows]), qb, 1.0))
+            stack = lambda *xs: jnp.stack(xs)  # noqa: E731
+            th_s, b2_s, acc_s = _improve_stacked(
+                jax.tree.map(stack, *[s[0] for s in states]),
+                jnp.stack([s[1] for s in states]),
+                jnp.stack([s[2] for s in states]),
+                jnp.stack([s[3] for s in states]),
+                jax.tree.map(stack, *[syn.params for _, syn, _ in dispatch]),
+                jax.tree.map(stack, *news),
+                jnp.stack(raw_ts),
+                jnp.stack(raw_bs),
+                dispatch[0][1].delta_v,
+            )
+            for g, (_, syn, rows) in enumerate(dispatch):
+                k = len(rows)
+                out_theta[rows] = np.asarray(th_s[g, :k])
+                out_beta2[rows] = np.asarray(b2_s[g, :k])
+                accepted[rows] = np.asarray(acc_s[g, :k])
+        return ImprovedAnswer(
+            theta=jnp.asarray(out_theta),
+            beta2=jnp.asarray(out_beta2),
+            raw_theta=raw.theta,
+            raw_beta2=raw.beta2,
+            accepted=jnp.asarray(accepted),
+        )
+
+    # -------------------------------------------------------------- record
+    def record(self, snippets: SnippetBatch, raw: RawAnswer):
+        """Enqueue final raw answers for learning (async per synopsis)."""
+        theta = np.asarray(raw.theta)
+        beta2 = np.asarray(raw.beta2)
+        for key, rows in group_rows(snippets):
+            syn = self.for_key(key)
+            sub = snippets[jnp.asarray(rows)]
+            syn.add(sub, theta[rows], beta2[rows])
+
+    # ----------------------------------------------------------- lifecycle
+    def drain(self):
+        """Barrier over every synopsis' async ingest queue.
+
+        Call at snapshot/refit boundaries; serving itself drains lazily
+        (each ``improve`` waits only for its own synopsis' pending batches).
+        """
+        for syn in self._synopses.values():
+            syn.drain()
+
+    def refit(self, steps: int = 150, lr: float = 0.1,
+              learn_sigma: bool = False):
+        """Offline learning pass (paper Algorithm 1). Drains async ingest."""
+        for syn in self._synopses.values():
+            syn.refit(steps=steps, lr=lr, learn_sigma=learn_sigma)
+
+    def ingest_stats(self) -> Dict[str, dict]:
+        """Per-synopsis async-ingest back-pressure telemetry, keyed by the
+        structured ``state_key`` form."""
+        return {
+            state_key(key): self._synopses[key].ingest_stats()
+            for key in sorted(self._synopses)
+        }
+
+    def stats(self) -> dict:
+        """Operator-facing snapshot: placement, occupancy, back-pressure."""
+        keys = {}
+        for key in sorted(self._synopses):
+            syn = self._synopses[key]
+            keys[state_key(key)] = {
+                "n": syn.n,
+                "capacity": syn.capacity,
+                "shard": self.shard_index(key),
+                "placement": self.describe_placement(key),
+                "ingest": syn.ingest_stats(),
+            }
+        return {"kind": self.kind, "n_shards": 1, "n_keys": len(keys),
+                "keys": keys}
+
+    # ------------------------------------------------------------- persist
+    def state_dict(self) -> Dict[str, dict]:
+        """Host snapshot of every synopsis, keyed by ``state_key``.
+
+        Drains async ingest first (via ``Synopsis.state_dict``) and returns
+        copies, so the snapshot is stable across later queries. Each entry
+        carries a ``shard`` tag recording where it lived — observability
+        only: ``load_state_dict`` re-places by policy, so a checkpoint
+        written under one placement restores onto any other (including a
+        different mesh shape).
+        """
+        out = {}
+        for key in sorted(self._synopses):
+            sd = self._synopses[key].state_dict()
+            sd["shard"] = np.asarray(self.shard_index(key), np.int64)
+            out[state_key(key)] = sd
+        return out
+
+    def load_state_dict(self, state: Dict[str, dict]):
+        """Restore synopses saved by any store's ``state_dict``.
+
+        Accepts both structured (``"agg0-measure1"``) and legacy
+        (``"0_1"``) key forms; ``shard`` tags are ignored in favor of this
+        store's own deterministic placement.
+        """
+        for name, sd in state.items():
+            sd = dict(sd)
+            sd.pop("shard", None)
+            self.for_key(parse_state_key(name)).load_state_dict(sd)
+
+
+class LocalSynopsisStore(SynopsisStore):
+    """Default store: every synopsis on the default device, one stacked
+    improve dispatch for the whole batch — bitwise-identical to the
+    historical engine-internal dict."""
+
+
+class ShardedSynopsisStore(SynopsisStore):
+    """Per-aggregate-key synopsis placement over the devices of a mesh.
+
+    ``mesh``: any JAX mesh — placement flattens its device grid; the same
+    mesh can simultaneously drive the sharded scan (``BatchExecutor``), so
+    ``repro.verdict.connect(..., mesh=...)`` shards both the data plane and
+    the learned state from one object. ``devices`` overrides the device
+    list directly (useful for re-placing a checkpoint onto a subset).
+
+    Placement is ``shard_index``: a deterministic hash of the key modulo
+    the device count — stable across processes, insertion orders and mesh
+    shapes, which is what makes checkpoint re-placement onto a different
+    mesh a pure load (no remapping table to persist).
+    """
+
+    kind = "sharded"
+
+    def __init__(self, schema, config, mesh=None, devices=None):
+        super().__init__(schema, config)
+        if devices is None:
+            devices = (list(np.asarray(mesh.devices).flat)
+                       if mesh is not None else jax.devices())
+        if not devices:
+            raise ValueError("ShardedSynopsisStore needs at least one device")
+        self.devices = list(devices)
+
+    # ---------------------------------------------------------- placement
+    def shard_index(self, key: AggKey) -> int:
+        return (int(key[0]) * 8191 + int(key[1])) % len(self.devices)
+
+    def device_for(self, key: AggKey):
+        return self.devices[self.shard_index(key)]
+
+    def describe_placement(self, key: AggKey) -> str:
+        i = self.shard_index(key)
+        return f"shard{i}:{self.devices[i]}"
+
+    # ------------------------------------------------------------ improve
+    def _dispatch_sets(self, groups: Sequence[tuple]) -> List[List[tuple]]:
+        """One stacked dispatch per device: states committed to different
+        devices cannot be fused into one program, and per-device fusion
+        keeps every shard's compute on its own device."""
+        by_dev: Dict[int, List[tuple]] = {}
+        for key, syn, rows in groups:
+            by_dev.setdefault(self.shard_index(key), []).append(
+                (key, syn, rows))
+        return [by_dev[i] for i in sorted(by_dev)]
+
+    # ----------------------------------------------------------- lifecycle
+    def drain(self):
+        """Parallel barrier: one waiter thread per occupied shard drains
+        that shard's synopses (total wall clock = the slowest shard, not
+        the sum over shards). A poisoned queue still re-raises — the first
+        failure in shard-index order wins."""
+        by_shard: Dict[int, List[Synopsis]] = {}
+        for key, syn in self._synopses.items():
+            by_shard.setdefault(self.shard_index(key), []).append(syn)
+        if len(by_shard) <= 1:
+            for syns in by_shard.values():
+                for syn in syns:
+                    syn.drain()
+            return
+        shards = sorted(by_shard)
+        errors: Dict[int, BaseException] = {}
+
+        def wait(shard):
+            for syn in by_shard[shard]:
+                try:
+                    syn.drain()
+                except BaseException as e:  # noqa: BLE001 — re-raised below
+                    errors.setdefault(shard, e)
+
+        threads = [threading.Thread(target=wait, args=(s,), daemon=True)
+                   for s in shards]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for shard in shards:
+            if shard in errors:
+                raise errors[shard]
+
+    def stats(self) -> dict:
+        out = super().stats()
+        occupancy = [{"device": str(d), "n_keys": 0, "fill": 0}
+                     for d in self.devices]
+        for key, syn in self._synopses.items():
+            shard = occupancy[self.shard_index(key)]
+            shard["n_keys"] += 1
+            shard["fill"] += syn.n
+        out["n_shards"] = len(self.devices)
+        out["shards"] = occupancy
+        return out

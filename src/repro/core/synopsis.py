@@ -259,7 +259,14 @@ class _IngestQueue:
 
 
 class Synopsis:
-    """Bounded per-aggregate-function snippet store + incremental GP state."""
+    """Bounded per-aggregate-function snippet store + incremental GP state.
+
+    ``device``: optional JAX device the model state (serve buffers and the
+    incremental Sigma^{-1} chain) is committed to — the placement hook the
+    ``ShardedSynopsisStore`` uses to spread aggregate keys over a mesh.
+    ``min_fill_bucket``/``min_q_bucket``: smallest serve-path tiles
+    (``EngineConfig`` lifts these per deployment; defaults unchanged).
+    """
 
     def __init__(
         self,
@@ -269,12 +276,18 @@ class Synopsis:
         params: Optional[GPParams] = None,
         async_ingest: bool = True,
         max_pending: int = MAX_PENDING_DEFAULT,
+        device=None,
+        min_fill_bucket: int = MIN_FILL_BUCKET,
+        min_q_bucket: int = MIN_Q_BUCKET,
     ):
         self.schema = schema
         self.capacity = int(capacity)
         self.delta_v = float(delta_v)
         self.async_ingest = bool(async_ingest)
         self.max_pending = int(max_pending)
+        self.device = device
+        self.min_fill_bucket = int(min_fill_bucket)
+        self.min_q_bucket = int(min_q_bucket)
         self._shed_count = 0
         self._restored_high_water = 0
         l, c, v = schema.n_num, schema.n_cat, max(schema.cat_vmax, 1)
@@ -292,12 +305,25 @@ class Synopsis:
         self._keys: dict = {}
         self.params = params or GPParams.init(schema)
         self._sigma = np.zeros((C, C))
-        self._sigma_inv = jnp.zeros((0, 0))
-        self._alpha = jnp.zeros((0,))
+        self._sigma_inv = self._put(jnp.zeros((0, 0)))
+        self._alpha = self._put(jnp.zeros((0,)))
         self._updates_since_refactor = 0
         self._order: list = []  # row ids in Sigma^{-1} ordering
         self._device_states: dict = {}  # fill bucket -> padded serve buffers
         self._ingest: Optional[_IngestQueue] = None
+
+    # -------------------------------------------------------------- placement
+    def _put(self, x):
+        """Commit an array (or pytree) to this synopsis' device.
+
+        With ``device=None`` this is a plain ``jnp`` conversion on the
+        default device — the historical behavior. All CPU host devices run
+        the same compiled programs, so placement never changes answers
+        bitwise; it only changes where the FLOPs land.
+        """
+        if self.device is None:
+            return jax.tree.map(jnp.asarray, x)
+        return jax.device_put(x, self.device)
 
     # ---------------------------------------------------------------- storage
     def _row_batch(self, rows) -> SnippetBatch:
@@ -520,10 +546,10 @@ class Synopsis:
         """Full O(n^3) rebuild of Sigma^{-1} from Sigma (numerical hygiene)."""
         rows = np.asarray(self._order, dtype=np.int64)
         if len(rows) == 0:
-            self._sigma_inv = jnp.zeros((0, 0))
+            self._sigma_inv = self._put(jnp.zeros((0, 0)))
             self._updates_since_refactor = 0
             return
-        sig = jnp.asarray(self._sigma[np.ix_(rows, rows)])
+        sig = self._put(self._sigma[np.ix_(rows, rows)])
         chol = inference.factorize(sig, JITTER)
         self._sigma_inv = inference.inverse_from_chol(chol)
         self._updates_since_refactor = 0
@@ -531,7 +557,7 @@ class Synopsis:
     def _refresh_alpha(self):
         rows = np.asarray(self._order, dtype=np.int64)
         if len(rows) == 0:
-            self._alpha = jnp.zeros((0,))
+            self._alpha = self._put(jnp.zeros((0,)))
             return
         batch = self._row_batch(rows)
         resid = jnp.asarray(self._theta[rows]) - covariance.prior_mean(batch, self.params)
@@ -571,7 +597,7 @@ class Synopsis:
     # ------------------------------------------------------------------ serve
     def _fill_bucket(self) -> int:
         """Power-of-two serve tile covering the current fill (<= capacity)."""
-        return bucket_size(self.n, MIN_FILL_BUCKET, cap=self.capacity)
+        return bucket_size(self.n, self.min_fill_bucket, cap=self.capacity)
 
     def _padded_state(self, bucket: Optional[int] = None):
         """Device-resident buffers padded to a fill bucket, cached per bucket.
@@ -589,14 +615,14 @@ class Synopsis:
         rows = np.asarray(self._order, dtype=np.int64)
         n = len(rows)
         idx = np.concatenate([rows, np.zeros((bucket - n,), np.int64)])
-        past = self._row_batch(idx)
-        valid = jnp.asarray(np.arange(bucket) < n, jnp.float64)
+        past = self._put(self._row_batch(idx))
+        valid = self._put(np.asarray(np.arange(bucket) < n, np.float64))
         sinv = np.eye(bucket)
         if n:
             sinv[:n, :n] = np.asarray(self._sigma_inv)
         alpha = np.zeros((bucket,))
         alpha[:n] = np.asarray(self._alpha)
-        state = (past, valid, jnp.asarray(sinv), jnp.asarray(alpha))
+        state = (past, valid, self._put(sinv), self._put(alpha))
         self._device_states[bucket] = state
         return state
 
@@ -616,7 +642,7 @@ class Synopsis:
             acc = jnp.zeros((new.n,), bool)
             return ImprovedAnswer(raw.theta, raw.beta2, raw.theta, raw.beta2, acc)
         q = new.n
-        qb = bucket_size(q, MIN_Q_BUCKET)
+        qb = bucket_size(q, self.min_q_bucket)
         padded_new = pad_snippets(new, qb)
         raw_theta = _pad_raw(raw.theta, qb, 0.0)
         raw_beta2 = _pad_raw(raw.beta2, qb, 1.0)

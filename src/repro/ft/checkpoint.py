@@ -14,7 +14,12 @@ Layout:  <dir>/step_<n>/
   different mesh (elastic re-scale) is the same code path (see
   repro.ft.elastic).
 - The Verdict query synopsis (a few MB, data-size-oblivious — paper §2) rides
-  along in every checkpoint under the 'synopsis' key when provided.
+  along in every checkpoint under the 'synopsis' key when provided. Store
+  snapshots (``SynopsisStore.state_dict``) are structured-key
+  (``"agg<k>-measure<m>"``) nested dicts with a per-entry ``shard`` tag;
+  ``restore_blind`` hands them back verbatim and the loading store re-places
+  each key by its own policy, so a checkpoint written under one mesh shape
+  restores onto any other (or onto the local store) unchanged.
 """
 from __future__ import annotations
 

@@ -114,9 +114,10 @@ class AqpService:
         """Barrier over the engine's async synopsis ingest.
 
         Flushes never wait for learning — answers return while covariance
-        builds catch up on the ingest threads. Call this only at snapshot
-        boundaries (checkpointing, refit, shutdown) where the fully-applied
-        learned state is required.
+        builds catch up on the ingest threads (across every shard when the
+        engine's store is sharded). Call this only at snapshot boundaries
+        (checkpointing, refit, shutdown) where the fully-applied learned
+        state is required.
         """
         self.engine.drain()
 
@@ -125,5 +126,19 @@ class AqpService:
         self.engine.refit(**kw)
 
     def snapshot(self, manager, step: int):
-        """Checkpoint the learned synopses (drains first; see repro.ft)."""
+        """Checkpoint the learned state (drains first; see repro.ft).
+
+        Rides the store's structured-key, shard-tagged payload: a snapshot
+        taken by a sharded service restores into a local one (and onto a
+        different mesh shape) unchanged.
+        """
         self.engine.save_synopses(manager, step)
+
+    def stats(self) -> dict:
+        """Operator snapshot: store placement/occupancy/back-pressure plus
+        this service's microbatching counters."""
+        return {
+            "store": self.engine.store.stats(),
+            "flushes": self.flushes,
+            "pending": self.pending,
+        }

@@ -14,7 +14,12 @@ See ``repro.verdict.session`` for the Session surface and the README's
 dict cells.
 """
 from repro.core.engine import EngineConfig
-from repro.verdict.answer import Cell, QueryAnswer
+from repro.core.store import (
+    LocalSynopsisStore,
+    ShardedSynopsisStore,
+    SynopsisStore,
+)
+from repro.verdict.answer import Cell, PlanReport, QueryAnswer
 from repro.verdict.query import (
     QueryBuilder,
     any_of,
@@ -23,16 +28,19 @@ from repro.verdict.query import (
     matches,
     one_of,
 )
-from repro.verdict.session import ErrorBudget, PlanReport, Session, connect
+from repro.verdict.session import ErrorBudget, Session, connect
 
 __all__ = [
     "Cell",
     "EngineConfig",
     "ErrorBudget",
+    "LocalSynopsisStore",
     "PlanReport",
     "QueryAnswer",
     "QueryBuilder",
     "Session",
+    "ShardedSynopsisStore",
+    "SynopsisStore",
     "any_of",
     "between",
     "connect",

@@ -1,9 +1,11 @@
-"""Typed answers for the public Session API.
+"""Typed answers and reports for the public Session API.
 
 ``Cell``/``QueryAnswer`` replace the engine-level ``List[dict]`` cells with
 frozen dataclasses; ``Cell.to_dict``/``from_dict`` round-trip bit-for-bit to
 the engine representation, so facade answers can always be checked against
-the engine's bitwise-parity oracle.
+the engine's bitwise-parity oracle. ``PlanReport`` is ``Session.explain``'s
+output: the plan the engine would run, including where each aggregate key's
+learned state is placed (``SynopsisStore`` shard assignments).
 """
 from __future__ import annotations
 
@@ -101,3 +103,48 @@ class QueryAnswer:
                 f"answer has {len(self.cells)} cells; use .cells directly"
             )
         return self.cells[0].estimate
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    """What ``Session.explain`` saw: the plan without running the scan.
+
+    ``q_buckets``/``fill_buckets``: predicted power-of-two serve tiles per
+    aggregate-function key ``(agg, measure)`` — the (Q-bucket, fill-bucket)
+    program the improve dispatch would compile/reuse. ``dedup_ratio`` is the
+    within-query snippet reuse (shared FREQ rows across SUM/COUNT cells).
+    ``placement``: per aggregate-function key, where the ``SynopsisStore``
+    puts (or would put) its learned state — ``"local"`` for the default
+    store, ``"shard<i>:<device>"`` under per-key mesh placement.
+    """
+
+    supported: bool
+    unsupported_reason: Optional[str]
+    n_cells: int
+    n_groups: int
+    truncated_groups: int
+    n_snippets: int
+    n_snippets_unique: int
+    dedup_ratio: float
+    q_buckets: dict
+    fill_buckets: dict
+    placement: dict = dataclasses.field(default_factory=dict)
+
+    def __str__(self) -> str:
+        head = ("supported" if self.supported
+                else f"raw-only ({self.unsupported_reason})")
+        lines = [
+            f"plan: {head}",
+            f"  cells={self.n_cells} groups={self.n_groups}"
+            f" truncated_groups={self.truncated_groups}",
+            f"  snippets={self.n_snippets} unique={self.n_snippets_unique}"
+            f" dedup={self.dedup_ratio:.2f}x",
+        ]
+        for key in sorted(self.q_buckets):
+            where = self.placement.get(key, "local")
+            lines.append(
+                f"  agg_key={key}: Q-bucket={self.q_buckets[key]}"
+                f" fill-bucket={self.fill_buckets[key]}"
+                f" placement={where}"
+            )
+        return "\n".join(lines)

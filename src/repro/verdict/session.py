@@ -1,15 +1,22 @@
 """The public Session facade: connect → query → explain/stream/execute.
 
 VerdictDB-style driver API over the engine/plan core: ``connect`` binds a
-relation (plus an ``EngineConfig``) to a ``Session``; queries are built with
-the typed ``QueryBuilder``; per-call accuracy/latency contracts are
-``ErrorBudget``s (BlinkDB-style); ``explain`` reports the plan the engine
-would run (support verdict, snippet counts, dedup, predicted shape buckets);
-``stream`` yields per-batch refined answers (the online-aggregation loop
-with the full improve/validate/record lifecycle); answers are typed
+relation (plus an ``EngineConfig``, plus optionally a JAX ``mesh``) to a
+``Session``; queries are built with the typed ``QueryBuilder``; per-call
+accuracy/latency contracts are ``ErrorBudget``s (BlinkDB-style); ``explain``
+reports the plan the engine would run (support verdict, snippet counts,
+dedup, predicted shape buckets, synopsis placement); ``stream`` yields
+per-batch refined answers (the online-aggregation loop with the full
+improve/validate/record lifecycle); answers are typed
 ``QueryAnswer``/``Cell`` dataclasses. Everything routes through the same
 ``repro.aqp.plan`` lifecycle the raw engine uses, so facade answers are
 bit-for-bit the engine's.
+
+One ``mesh`` shards BOTH planes: the scan (``BatchExecutor`` via
+``shard_map``+psum over the relation) and the learned state (a
+``ShardedSynopsisStore`` placing each aggregate key's synopsis on a mesh
+device). ``Session.stats()`` surfaces the resulting shard occupancy and
+ingest back-pressure.
 """
 from __future__ import annotations
 
@@ -26,9 +33,9 @@ from repro.aqp.plan import (
 )
 from repro.aqp.relation import Relation
 from repro.core.engine import EngineConfig, VerdictEngine
-from repro.core.synopsis import MIN_Q_BUCKET
+from repro.core.store import ShardedSynopsisStore, SynopsisStore, group_rows
 from repro.core.types import bucket_size
-from repro.verdict.answer import QueryAnswer
+from repro.verdict.answer import PlanReport, QueryAnswer
 from repro.verdict.query import QueryBuilder
 
 QueryLike = Union[Q.AggQuery, QueryBuilder]
@@ -50,49 +57,17 @@ class ErrorBudget:
     delta: Optional[float] = None
 
 
-@dataclasses.dataclass(frozen=True)
-class PlanReport:
-    """What ``Session.explain`` saw: the plan without running the scan.
-
-    ``q_buckets``/``fill_buckets``: predicted power-of-two serve tiles per
-    aggregate-function key ``(agg, measure)`` — the (Q-bucket, fill-bucket)
-    program the improve dispatch would compile/reuse. ``dedup_ratio`` is the
-    within-query snippet reuse (shared FREQ rows across SUM/COUNT cells).
-    """
-
-    supported: bool
-    unsupported_reason: Optional[str]
-    n_cells: int
-    n_groups: int
-    truncated_groups: int
-    n_snippets: int
-    n_snippets_unique: int
-    dedup_ratio: float
-    q_buckets: dict
-    fill_buckets: dict
-
-    def __str__(self) -> str:
-        head = ("supported" if self.supported
-                else f"raw-only ({self.unsupported_reason})")
-        lines = [
-            f"plan: {head}",
-            f"  cells={self.n_cells} groups={self.n_groups}"
-            f" truncated_groups={self.truncated_groups}",
-            f"  snippets={self.n_snippets} unique={self.n_snippets_unique}"
-            f" dedup={self.dedup_ratio:.2f}x",
-        ]
-        for key in sorted(self.q_buckets):
-            lines.append(
-                f"  agg_key={key}: Q-bucket={self.q_buckets[key]}"
-                f" fill-bucket={self.fill_buckets[key]}"
-            )
-        return "\n".join(lines)
-
-
 def connect(relation: Relation,
-            config: Optional[EngineConfig] = None) -> "Session":
-    """Open a Session over a relation (the driver-level entry point)."""
-    return Session(relation, config)
+            config: Optional[EngineConfig] = None,
+            mesh=None) -> "Session":
+    """Open a Session over a relation (the driver-level entry point).
+
+    ``mesh``: optional JAX mesh. One mesh shards both planes — the fused
+    scan runs through ``shard_map``+psum over its devices, and the learned
+    state is placed per aggregate key by a ``ShardedSynopsisStore`` over the
+    same devices. Without a mesh both stay on the default device.
+    """
+    return Session(relation, config, mesh=mesh)
 
 
 class Session:
@@ -100,11 +75,17 @@ class Session:
 
     Wraps a ``VerdictEngine`` plus a persistent ``BatchExecutor`` so
     workload-level fusion stats survive across calls (``last_stats``).
+    A ``mesh`` (see ``connect``) shards the scan and the synopsis store
+    from the same device grid.
     """
 
     def __init__(self, relation: Relation,
                  config: Optional[EngineConfig] = None, mesh=None):
-        self.engine = VerdictEngine(relation, config)
+        store = None
+        if mesh is not None:
+            store = (lambda schema, cfg:
+                     ShardedSynopsisStore(schema, cfg, mesh=mesh))
+        self.engine = VerdictEngine(relation, config, store=store)
         self._executor = BatchExecutor(self.engine, mesh=mesh)
 
     # ------------------------------------------------------------ properties
@@ -115,6 +96,11 @@ class Session:
     @property
     def config(self) -> EngineConfig:
         return self.engine.config
+
+    @property
+    def store(self) -> SynopsisStore:
+        """The session's synopsis store (placement-aware learned state)."""
+        return self.engine.store
 
     @property
     def last_stats(self) -> BatchStats:
@@ -150,19 +136,26 @@ class Session:
 
     # --------------------------------------------------------------- explain
     def explain(self, q: QueryLike) -> PlanReport:
-        """Plan a query without scanning past the group-discovery probe."""
+        """Plan a query without scanning past the group-discovery probe.
+
+        Reports, per aggregate-function key, the predicted serve tiles AND
+        the store's shard assignment — for keys that do not exist yet this
+        is where the state *would* be placed (placement is a pure function
+        of the key, never of arrival order).
+        """
         eng = self.engine
         wp = plan_workload(eng, [self._lower(q)])
         lp = wp.logical[0]
         if lp.plan is None:
-            return PlanReport(True, None, 0, 0, 0, 0, 0, 1.0, {}, {})
+            return PlanReport(True, None, 0, 0, 0, 0, 0, 1.0, {}, {}, {})
         n_total = lp.plan.snippets.n
         n_unique = wp.stats.n_snippets_fused
-        q_buckets, fill_buckets = {}, {}
-        for key, rows in eng._group_rows(lp.plan.snippets):
-            q_buckets[key] = bucket_size(len(rows), MIN_Q_BUCKET)
-            syn = eng.synopses.get(key)
+        q_buckets, fill_buckets, placement = {}, {}, {}
+        for key, rows in group_rows(lp.plan.snippets):
+            q_buckets[key] = bucket_size(len(rows), eng.config.min_q_bucket)
+            syn = eng.store.get(key)
             fill_buckets[key] = syn._fill_bucket() if syn is not None else 0
+            placement[key] = eng.store.describe_placement(key)
         return PlanReport(
             supported=lp.supported,
             unsupported_reason=lp.reason,
@@ -174,6 +167,7 @@ class Session:
             dedup_ratio=wp.stats.dedup_ratio,
             q_buckets=q_buckets,
             fill_buckets=fill_buckets,
+            placement=placement,
         )
 
     # ---------------------------------------------------------------- stream
@@ -219,6 +213,19 @@ class Session:
     def ingest_stats(self) -> dict:
         """Per-synopsis async-ingest back-pressure telemetry."""
         return self.engine.ingest_stats()
+
+    def stats(self) -> dict:
+        """Operator snapshot of the learned-state plane.
+
+        ``store``: placement kind, per-key occupancy/placement/ingest
+        telemetry, and (sharded) per-shard occupancy — back-pressure and
+        shard skew at a glance. ``workload``: fusion accounting of the most
+        recent execute/execute_many call.
+        """
+        return {
+            "store": self.engine.store.stats(),
+            "workload": dataclasses.asdict(self.last_stats),
+        }
 
     def save(self, manager, step: int):
         """Checkpoint the learned synopses through a CheckpointManager."""

@@ -108,10 +108,10 @@ def test_batched_matches_sequential_bitwise(relation, workload):
     r_bat = BatchExecutor(bat).execute_many(workload)
     _assert_results_equal(r_seq, r_bat)
     # The learned state is equally identical: same snippets, same answers.
-    assert seq.synopses.keys() == bat.synopses.keys()
-    for key in seq.synopses:
-        np.testing.assert_array_equal(seq.synopses[key].theta(),
-                                      bat.synopses[key].theta())
+    assert seq.store.keys() == bat.store.keys()
+    for key in seq.store:
+        np.testing.assert_array_equal(seq.store.get(key).theta(),
+                                      bat.store.get(key).theta())
 
 
 def test_batched_matches_sequential_with_early_stopping(relation, workload):
@@ -176,7 +176,7 @@ def test_unsupported_and_empty_group_queries_match_sequential(relation):
     assert not r_bat[1].supported
     assert r_bat[3].cells == [] and r_bat[3].supported
     _assert_results_equal(r_seq, r_bat)
-    assert len(bat.synopses) == len(seq.synopses)  # no learning from raw-only
+    assert len(bat.store) == len(seq.store)  # no learning from raw-only
 
 
 def test_workload_of_only_empty_plans(relation):

@@ -95,7 +95,7 @@ def test_unsupported_query_bypasses_learning(relation):
                  predicates=(TextLike("%apple%"), NumRange(0, 1.0, 5.0)))
     r = eng.execute(q)
     assert not r.supported and "textual" in r.unsupported_reason
-    assert len(eng.synopses) == 0  # nothing recorded
+    assert len(eng.store) == 0  # nothing recorded
     q2 = AggQuery(aggs=(AggSpec("MIN", 0),), predicates=())
     assert not eng.execute(q2).supported
 
@@ -120,7 +120,7 @@ def test_validation_rejects_corrupt_model(relation):
                                                capacity=128))
     eng.execute_many(W.make_workload(5, relation.schema, 10, agg_kinds=("AVG",)))
     # Corrupt the model: shift the prior mean absurdly and rebuild.
-    for syn in eng.synopses.values():
+    for syn in eng.store.values():
         syn.params = GPParams(log_ls=syn.params.log_ls - 5.0,  # tiny ls
                               log_sigma2=syn.params.log_sigma2 + 8.0,
                               mu=syn.params.mu + 1e3)
@@ -178,7 +178,7 @@ def test_append_adjustment_keeps_bounds_valid():
         np.asarray(rel.measures[:500]), np.asarray(extra.measures[:500]),
         rel.cardinality, extra.cardinality)
     assert stats.mu[0] == pytest.approx(0.8, abs=0.15)
-    for syn in eng.synopses.values():
+    for syn in eng.store.values():
         before = syn.beta2().copy()
         syn.apply_append(stats)
         after = syn.beta2()

@@ -110,9 +110,9 @@ def test_synopsis_checkpoint_roundtrip_makes_new_engine_smarter(tmp_path):
     fresh = VerdictEngine(rel, cfg)  # simulated process restart
     extra = fresh.load_synopses(mgr)
     assert extra["kind"] == "verdict-synopses"
-    assert fresh.synopses.keys() == eng.synopses.keys()
-    for key, syn in eng.synopses.items():
-        got = fresh.synopses[key].state_dict()
+    assert fresh.store.keys() == eng.store.keys()
+    for key, syn in eng.store.items():
+        got = fresh.store.get(key).state_dict()
         want = syn.state_dict()
         assert got.keys() == want.keys()
         for k in want:

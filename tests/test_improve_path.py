@@ -166,7 +166,7 @@ def test_stacked_dispatch_bitwise_matches_per_synopsis_improve():
     ])
     raw = RawAnswer(jnp.asarray(rng.normal(1.0, 0.3, snips.n)),
                     jnp.asarray(np.full(snips.n, 0.02)))
-    assert len(eng.synopses) == 2  # the dispatch actually stacks two groups
+    assert len(eng.store) == 2  # the dispatch actually stacks two groups
     imp = eng._improve(snips, raw)
     agg = np.asarray(snips.agg)
     theta = np.asarray(raw.theta)

@@ -144,4 +144,4 @@ def test_forced_raw_only_contract(relation, workload):
     r = eng._execute_raw_only(q, "forced by caller", max_batches=2)
     assert not r.supported and r.unsupported_reason == "forced by caller"
     assert r.batches_used == 2 and r.cells
-    assert eng.synopses == {}  # no learning happened
+    assert len(eng.store) == 0  # no learning happened

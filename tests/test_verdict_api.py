@@ -98,8 +98,8 @@ def test_explain_reports_plan(relation):
         assert qb & (qb - 1) == 0 and qb >= 4
     assert "supported" in str(rep)
     # Nothing was learned or scanned beyond the group-discovery probe.
-    assert s.engine.synopses == {} or all(
-        syn.n == 0 for syn in s.engine.synopses.values())
+    assert len(s.store) == 0 or all(
+        syn.n == 0 for syn in s.store.values())
 
     bad = s.query().avg("v0").where(vd.matches("%x%"))
     rep2 = s.explain(bad)
