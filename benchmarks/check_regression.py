@@ -32,6 +32,8 @@ def current_metrics(improve_report: str = "", shard_report: str = "") -> dict:
             rep = json.load(f)
         rows["shard/oracle_bitwise_equal"] = float(
             rep["oracle"]["bitwise_equal"] and rep["oracle"]["state_equal"])
+        rows["scan/padded_parity"] = float(
+            rep.get("scan", {}).get("padded_parity", 0.0))
     else:
         import shard_bench
 
@@ -86,6 +88,9 @@ def update(rows: dict) -> dict:
         # Placement never changes answers: sharded-store answers and learned
         # state must stay bitwise-equal to the local store.
         "shard/oracle_bitwise_equal": True,
+        # Layout is non-observable: the masked padded sharded scan must stay
+        # bitwise-equal to the unsharded oracle for indivisible blocks.
+        "scan/padded_parity": True,
     }
     return {
         "tolerance": 0.25,

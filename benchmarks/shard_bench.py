@@ -15,7 +15,15 @@ engine must answer a workload bitwise-identically to a local-store engine —
 the acceptance property the regression gate pins (placement moves FLOPs,
 never values). On a single-device container the sharded store degenerates to
 one shard; run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-(the ``sharded-smoke`` CI job) for real multi-device placement.
+(the ``sharded`` CI matrix job) for real multi-device placement.
+
+And measures the scan plane's masked padding seam
+(``repro.aqp.executor.eval_partials_sharded``): throughput of a
+mesh-INDIVISIBLE tuple block (padded + validity-masked up to the tile) vs
+the divisible same-tile block, plus the ``scan/padded_parity`` flag — the
+padded sharded scan must stay BITWISE equal to the unsharded oracle across
+a mini matrix of block sizes (the regression gate pins it; the full matrix
+lives in ``tests/test_sharded_scan.py``).
 
     PYTHONPATH=src python benchmarks/shard_bench.py [--smoke] [--out f.json]
 
@@ -143,17 +151,85 @@ def bench_oracle_parity(n_queries, n_rows, seed=2):
             "devices": jax.device_count()}
 
 
+def bench_padded_scan(tile, n_snippets, iters, seed=4):
+    """Masked padded sharded-scan throughput + the bitwise parity flag.
+
+    Compares ``eval_partials_sharded`` on a mesh-divisible ``tile``-row
+    block (no padding) against an indivisible block of ``tile - tile//8 - 1``
+    rows that pads back up to the same tile — the price of shape-agnosticism
+    is the masked padding, so the two should track each other closely.
+    """
+    from jax.sharding import Mesh
+
+    from repro.aqp.executor import eval_partials, eval_partials_sharded
+    from repro.core.types import Schema, make_snippets, pad_snippets
+
+    rng = np.random.default_rng(seed)
+    sch = Schema(num_lo=(0.0, 0.0), num_hi=(1.0, 1.0), cat_sizes=(4,),
+                 n_measures=2)
+    ranges = []
+    for _ in range(n_snippets):
+        a = rng.uniform(0, 0.6)
+        ranges.append({0: (a, a + rng.uniform(0.05, 0.4))})
+    snippets = pad_snippets(make_snippets(sch, agg=0, measure=0,
+                                          num_ranges=ranges))
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+
+    def block(t):
+        return (jnp.asarray(rng.uniform(0, 1, (t, 2))),
+                jnp.asarray(rng.integers(0, 4, (t, 1)), np.int32),
+                jnp.asarray(rng.normal(1.0, 0.5, (t, 2))))
+
+    out = {"tile": tile, "devices": jax.device_count()}
+    t_indiv = tile - tile // 8 - 1  # pads back up to the same tile
+    for name, t in (("unpadded", tile), ("padded", t_indiv)):
+        num, cat, meas = block(t)
+        eval_partials_sharded(mesh, "data", num, cat, meas, snippets)  # warm
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            p = eval_partials_sharded(mesh, "data", num, cat, meas, snippets)
+            p.sums.block_until_ready()
+            times.append(time.perf_counter() - t0)
+        p50 = float(np.percentile(times, 50))
+        out[name] = {"rows": t, "p50_ms": p50 * 1e3,
+                     "tuples_per_sec": t / max(p50, 1e-9)}
+    out["padded_over_unpadded"] = (
+        out["padded"]["tuples_per_sec"]
+        / max(out["unpadded"]["tuples_per_sec"], 1e-9))
+    # Bitwise parity mini-matrix (the full one is tests/test_sharded_scan.py).
+    parity = True
+    for t in (7, tile // 8 + 3, t_indiv):
+        num, cat, meas = block(t)
+        want = eval_partials(num, cat, meas, snippets)
+        got = eval_partials_sharded(mesh, "data", num, cat, meas, snippets)
+        for f in ("sums", "sumsq", "count", "scanned"):
+            parity = parity and bool(
+                np.array_equal(np.asarray(getattr(got, f)),
+                               np.asarray(getattr(want, f))))
+    out["padded_parity"] = float(parity)
+    return out
+
+
 def bench(smoke=False):
     if smoke:
         paths = bench_store_paths(n_measures=2, fill=32, n_per_key=8,
                                   iters=20)
         oracle = bench_oracle_parity(n_queries=6, n_rows=2_000)
+        scan = bench_padded_scan(tile=1024, n_snippets=32, iters=20)
     else:
         paths = bench_store_paths(n_measures=4, fill=128, n_per_key=16,
                                   iters=40)
         oracle = bench_oracle_parity(n_queries=20, n_rows=20_000)
-    report = {"paths": paths, "oracle": oracle}
+        scan = bench_padded_scan(tile=8192, n_snippets=128, iters=40)
+    report = {"paths": paths, "oracle": oracle, "scan": scan}
     rows = [
+        ("scan/padded_tuples_per_sec",
+         scan["padded"]["tuples_per_sec"]),
+        ("scan/unpadded_tuples_per_sec",
+         scan["unpadded"]["tuples_per_sec"]),
+        ("scan/padded_over_unpadded", scan["padded_over_unpadded"]),
+        ("scan/padded_parity", scan["padded_parity"]),
         ("shard/improve_p50_local_ms", paths["local"]["improve_p50_ms"]),
         ("shard/improve_p50_sharded_ms", paths["sharded"]["improve_p50_ms"]),
         ("shard/improve_sharded_over_local",
@@ -190,7 +266,8 @@ def main():
         with open(args.out, "w") as f:
             f.write(blob + "\n")
     if not (report["oracle"]["bitwise_equal"]
-            and report["oracle"]["state_equal"]):
+            and report["oracle"]["state_equal"]
+            and report["scan"]["padded_parity"]):
         raise SystemExit(1)
 
 

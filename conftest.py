@@ -1,3 +1,56 @@
-import sys, os
+"""Shared pytest wiring: paths + the forced multi-device host topology.
+
+Multi-device tests (the sharded scan parity matrix, the SynopsisStore
+placement suite) need fake host CPU devices, which XLA only honors if the
+flag is set BEFORE the backend initializes — i.e. before any test module
+imports jax. This conftest therefore forces the topology at collection
+time, and tests *declare* the device count they need through the
+``forced_devices`` fixture instead of every CI job duplicating
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` env blocks.
+
+``REPRO_FORCE_HOST_DEVICES`` overrides the forced count (CI's device-count
+matrix sets 1 and 8); an explicit pre-set ``xla_force_host_platform_device_count``
+in ``XLA_FLAGS`` always wins. Every test must pass under ANY topology —
+``forced_devices(n)`` skips (never fails) when the host has fewer than
+``n`` devices, so the single-device leg degenerates gracefully.
+"""
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests"))
+
+_FORCED = int(os.environ.get("REPRO_FORCE_HOST_DEVICES", "8"))
+if (_FORCED > 1
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_FORCED}"
+    ).strip()
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def forced_devices():
+    """``forced_devices(n)`` → the first ``n`` host devices, or skip.
+
+    The declaration point for multi-device tests: parametrize over device
+    counts and carve each mesh out of the forced topology, e.g.::
+
+        def test_parity(forced_devices):
+            mesh = Mesh(np.array(forced_devices(4)), ("data",))
+
+    Skips when the topology is too small (e.g. the CI matrix leg with
+    ``REPRO_FORCE_HOST_DEVICES=1``) so device counts never silently lie.
+    """
+    import jax
+
+    def take(n: int):
+        if jax.device_count() < n:
+            pytest.skip(f"needs {n} host devices, have {jax.device_count()}"
+                        " (see conftest.py / REPRO_FORCE_HOST_DEVICES)")
+        return jax.devices()[:n]
+
+    return take

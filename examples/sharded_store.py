@@ -6,17 +6,20 @@ mesh, and shows the placement seam end to end:
 
   - ``explain`` reports, per aggregate key, which shard/device the learned
     state lives on (before the key even exists);
-  - queries run the fused scan through ``shard_map``+psum over the mesh
-    while each key's synopsis model is committed to its assigned device;
+  - queries run the fused scan through the masked ``ShardedScanPlacement``
+    over the mesh while each key's synopsis model is committed to its
+    assigned device;
   - ``Session.stats()`` shows shard occupancy and ingest back-pressure;
   - the checkpoint round-trip re-places the sharded state onto a SMALLER
     device set (elastic re-scale) and keeps answering bit-for-bit.
 
     PYTHONPATH=src python examples/sharded_store.py [--smoke]
 
-Note: the sharded scan shards the tuple axis, so sample batches must divide
-by the mesh size (rows * sample_rate / n_batches % n_devices == 0) — the
-synopsis store itself has no such constraint.
+The sharded scan is shape-agnostic: sample batches of ANY size shard over
+ANY mesh (the tuple axis pads to a power-of-two tile with a validity mask,
+``repro.aqp.executor.ScanPlacement``), so — like the store — the scan
+imposes no constraint on the relation/mesh combination, and reported
+scanned-tuple counts stay true counts.
 """
 import argparse
 import os
@@ -36,14 +39,17 @@ from repro.ft.checkpoint import CheckpointManager  # noqa: E402
 def main(smoke: bool = False):
     devices = jax.devices()
     mesh = Mesh(np.array(devices), ("data",))
-    n_rows, n_queries = (8_000, 10) if smoke else (40_000, 30)
+    n_rows, n_queries = (8_100, 10) if smoke else (40_500, 30)
     rel = W.make_relation(seed=0, n_rows=n_rows, n_num=2, cat_sizes=(4,),
                           n_measures=2, lengthscale=0.4, noise=0.2)
-    # 8000*0.2/5 = 320 rows per sample batch — divisible by 8 devices.
+    # 8100*0.2/5 = 324 rows per sample batch — NOT divisible by 8 devices;
+    # the masked padded scan shards it anyway (and counts 324, not the
+    # padded 512-row tile, as scanned).
     cfg = vd.EngineConfig(sample_rate=0.2, n_batches=5, capacity=512)
     session = vd.connect(rel, cfg, mesh=mesh)
+    st = session.stats()
     print(f"mesh: {len(devices)} devices; store kind: "
-          f"{session.store.stats()['kind']}")
+          f"{st['store']['kind']}; scan: {st['scan']['kind']}")
 
     q = (session.query().avg("v0").avg("v1").count()
          .where(vd.between("x0", 2.0, 8.0)).group_by("c0"))
@@ -60,6 +66,11 @@ def main(smoke: bool = False):
     for shard in st["store"]["shards"]:
         print(f"  {shard['device']}: keys={shard['n_keys']} "
               f"fill={shard['fill']}")
+    scan = st["scan"]
+    print(f"scan plane: {scan['kind']} over {scan['n_shards']} shards — "
+          f"{scan['tuples_scanned']} true tuples scanned in "
+          f"{scan['blocks_evaluated']} blocks (+{scan['pad_rows']} masked "
+          f"padding rows, invisible in every count)")
     print(f"ingest back-pressure: "
           f"{ {k: v['ingest']['high_water'] for k, v in st['store']['keys'].items()} }")
 

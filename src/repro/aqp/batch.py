@@ -16,8 +16,9 @@ to one engine:
    same content hash ``Synopsis`` uses (``snippet_key``);
 2. two ``PhysicalPlan``s scan sample batches lazily, evaluating each batch
    EXACTLY ONCE for the union of snippets — supported queries through the
-   engine's eval path (pure-jnp oracle, Pallas kernel, or ``shard_map``+psum
-   when a mesh is given), raw-only probes through pure ``eval_partials``;
+   executor's ``ScanPlacement`` (pure-jnp oracle, Pallas kernel, or the
+   masked shape-agnostic sharded scan when a mesh is given), raw-only
+   probes through pure ``eval_partials``;
 3. ``replay_query`` replays queries in submission order against cumulative
    per-batch partials: improve via the synopsis, early-stop per query once
    its improved bound meets the target, and record raw answers — the same
@@ -46,7 +47,7 @@ from __future__ import annotations
 from typing import List, Optional, Sequence
 
 from repro.aqp import queries as Q
-from repro.aqp.executor import eval_partials_sharded
+from repro.aqp.executor import ScanPlacement, scan_placement
 from repro.aqp.plan import (
     BatchStats,
     PhysicalPlan,
@@ -63,26 +64,29 @@ __all__ = ["BatchExecutor", "BatchStats"]
 class BatchExecutor:
     """Fused executor over one ``VerdictEngine`` (see module docstring).
 
-    ``mesh``: optional JAX mesh; the fused scan then runs through
-    ``eval_partials_sharded`` over ``mesh_axis`` (the collective is the
-    aggregation tree). Stats of the latest call are kept in ``self.stats``.
+    The scan routes through a ``ScanPlacement`` (``repro.aqp.executor``):
+    pass ``placement=`` directly, or ``mesh=`` to build a
+    ``ShardedScanPlacement`` over ``mesh_axis`` (shape-agnostic masked
+    sharding — no divisibility precondition); with neither, the engine's
+    own placement (local by default) is used. Stats of the latest call are
+    kept in ``self.stats``.
     """
 
-    def __init__(self, engine, mesh=None, mesh_axis: str = "data"):
+    def __init__(self, engine, mesh=None, mesh_axis: str = "data",
+                 placement: ScanPlacement = None):
         self.engine = engine
-        self.mesh = mesh
-        self.mesh_axis = mesh_axis
+        if placement is None:
+            placement = (scan_placement(mesh, mesh_axis) if mesh is not None
+                         else getattr(engine, "scan", None) or ScanPlacement())
+        self.placement = placement
+        self.mesh = placement.mesh  # back-compat aliases
+        self.mesh_axis = placement.axis
         self.stats = BatchStats()
 
     # ---------------------------------------------------------------- scan
     def _eval(self, block, padded: SnippetBatch):
-        if self.mesh is not None:
-            return eval_partials_sharded(
-                self.mesh, self.mesh_axis,
-                block.num_normalized, block.cat, block.measures, padded,
-            )
-        return self.engine._eval_fn(
-            block.num_normalized, block.cat, block.measures, padded
+        return self.placement.eval_block(
+            block, padded, local_eval=self.engine._eval_fn
         )
 
     # ------------------------------------------------------------- execute

@@ -5,9 +5,24 @@ predicate mask with vectorized compares, then aggregate with mask^T @ values on
 the MXU (see ``repro.kernels.range_mask_agg`` for the Pallas kernel; this module
 is the pure-jnp oracle and the host-side accumulation / estimate logic).
 
-Distribution: relations are sharded over the ``data`` mesh axis; each device
-computes local partial (sum, count, sumsq) vectors and a single ``psum``
-finishes the aggregation — the collective *is* the aggregation tree.
+Distribution: the scan is shape-agnostic. A tuple block of ANY size runs over
+a mesh of ANY size: the tuple axis is padded to a power-of-two tile divisible
+by the mesh, padding rows carry an explicit per-tuple *validity mask* (so
+``Partials.scanned`` is the mask sum — a real tuple count, never the padded
+shape), and the predicate-mask build — the O(T·n·(l+c)) compare work — runs
+sharded via ``shard_map``. The masked mask is then gathered and the final
+(2m+1)-column aggregation replays the unsharded oracle's exact reduction
+order, so sharded partials are BITWISE equal to ``eval_partials`` for every
+(relation size, mesh size) combination (pinned by
+``tests/test_sharded_scan.py``; a per-shard matmul + psum tree would be
+deterministic but NOT oracle-bitwise — fp addition is not associative).
+
+``ScanPlacement`` is the placement seam of the scan plane (the data-plane
+mirror of ``repro.core.store.SynopsisStore``): it owns where tuple blocks
+live (``NamedSharding(mesh, P(axis))`` + ``jax.device_put``) and how a block
+is evaluated. The ROADMAP multi-host item extends exactly this seam to
+``jax.process_count() > 1`` (per-process addressable shards + a cross-host
+gather of the mask blocks).
 """
 from __future__ import annotations
 
@@ -30,7 +45,8 @@ class Partials:
     sums: jnp.ndarray  # (n,) sum of measure over matching tuples
     sumsq: jnp.ndarray  # (n,)
     count: jnp.ndarray  # (n,) matching tuples
-    scanned: jnp.ndarray  # () total tuples scanned
+    scanned: jnp.ndarray  # () total VALID tuples scanned (mask sum, a real
+    # count — zero-padded tuples never inflate it)
 
     @staticmethod
     def zeros(n: int) -> "Partials":
@@ -46,8 +62,13 @@ class Partials:
         )
 
 
-def predicate_mask(num_normalized, cat, snippets: SnippetBatch):
-    """(T, n) float mask of tuples satisfying each snippet's predicates."""
+def predicate_mask(num_normalized, cat, snippets: SnippetBatch, valid=None):
+    """(T, n) float mask of tuples satisfying each snippet's predicates.
+
+    ``valid``: optional (T,) 0/1 per-tuple validity mask; invalid (padding)
+    rows are forced to exactly 0.0 in every column, valid rows are untouched
+    bitwise (multiplication by 1.0 is exact).
+    """
     x = num_normalized  # (T, l), normalized units — same as snippet lo/hi
     m_num = jnp.all(
         (x[:, None, :] >= snippets.lo[None, :, :] - 1e-12)
@@ -60,21 +81,41 @@ def predicate_mask(num_normalized, cat, snippets: SnippetBatch):
         # snippets.cat[:, k, :]: (n, V); cat[:, k]: (T,) codes
         mk = jnp.take(snippets.cat[:, k, :], cat[:, k], axis=1)  # (n, T)
         mask = mask & mk.T
-    return mask.astype(jnp.float64)
+    mask = mask.astype(jnp.float64)
+    if valid is not None:
+        mask = mask * valid[:, None]
+    return mask
 
 
-@partial(jax.jit, static_argnames=())
-def eval_partials(num_normalized, cat, measures, snippets: SnippetBatch) -> Partials:
-    """Partial statistics for one tuple block (pure-jnp oracle path)."""
-    mask = predicate_mask(num_normalized, cat, snippets)  # (T, n)
-    vals = measures[:, jnp.arange(measures.shape[1])]  # (T, m)
+@jax.jit
+def _partials_from_mask(mask, measures, snippets: SnippetBatch,
+                        scanned) -> Partials:
+    """The mask → sufficient-statistics aggregation, factored out so the
+    sharded path can replay the oracle's EXACT reduction (same jitted ops on
+    identical values ⇒ bitwise-identical partials)."""
     per_measure_sum = mask.T @ measures  # (n, m)
     per_measure_sq = mask.T @ (measures * measures)  # (n, m)
     idx = snippets.measure[:, None]
     sums = jnp.take_along_axis(per_measure_sum, idx, axis=1)[:, 0]
     sumsq = jnp.take_along_axis(per_measure_sq, idx, axis=1)[:, 0]
     count = jnp.sum(mask, axis=0)
-    return Partials(sums, sumsq, count, jnp.asarray(float(num_normalized.shape[0])))
+    return Partials(sums, sumsq, count, scanned)
+
+
+@partial(jax.jit, static_argnames=())
+def eval_partials(num_normalized, cat, measures, snippets: SnippetBatch,
+                  valid=None) -> Partials:
+    """Partial statistics for one tuple block (pure-jnp oracle path).
+
+    ``valid``: optional (T,) validity mask for zero-padded tuple blocks.
+    Padding rows contribute exactly nothing to sums/sumsq/count (their mask
+    row is exactly 0.0 and their payload is zeros), and ``scanned`` is the
+    mask sum — the true number of tuples scanned, not the padded shape.
+    """
+    mask = predicate_mask(num_normalized, cat, snippets, valid)  # (T, n)
+    scanned = (jnp.asarray(float(num_normalized.shape[0]))
+               if valid is None else jnp.sum(valid))
+    return _partials_from_mask(mask, measures, snippets, scanned)
 
 
 jax.tree_util.register_dataclass(
@@ -82,22 +123,227 @@ jax.tree_util.register_dataclass(
 )
 
 
-def eval_partials_sharded(mesh, axis: str, num_normalized, cat, measures, snippets):
-    """Distributed partials over a relation sharded on ``axis`` (shard_map+psum)."""
-    from jax.sharding import PartitionSpec as P
-    from jax.experimental.shard_map import shard_map
+def padded_tuple_count(t: int, n_shards: int) -> int:
+    """Tuple-axis tile for a ``t``-row block over ``n_shards`` devices.
 
-    def local(x, c, m, s):
-        p = eval_partials(x, c, m, s)
-        return jax.tree.map(lambda v: jax.lax.psum(v, axis), p)
+    Smallest power of two >= t, rounded up to a multiple of the shard count
+    (the round-up is a no-op for power-of-two meshes). Power-of-two tiling
+    keeps the number of compiled scan programs logarithmic in the largest
+    block seen; mesh divisibility lets ``shard_map`` split the tuple axis
+    evenly with NO precondition on the relation/mesh combination.
+    """
+    n_shards = max(int(n_shards), 1)
+    b = 1
+    while b < t:
+        b *= 2
+    return -(-b // n_shards) * n_shards
 
-    fn = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P()),
-        out_specs=P(),
+
+def pad_tuple_axis(n_shards: int, num_normalized, cat, measures, valid=None):
+    """Zero-pad the tuple axis to ``padded_tuple_count`` rows.
+
+    Returns ``(num, cat, measures, valid)`` where ``valid`` marks the
+    original rows with 1.0 and the padding with 0.0 (an existing ``valid``
+    is extended). Padding payloads are zeros; categorical codes pad with 0,
+    which is always an in-domain index — the validity mask, not the padded
+    values, is what guarantees they contribute nothing. ``measures`` may be
+    None (the sharded mask stage has no use for the payload — the
+    oracle-order reduction reads the original, unpadded measures).
+    """
+    t = num_normalized.shape[0]
+    if valid is None:
+        valid = jnp.ones((t,))
+    k = padded_tuple_count(t, n_shards) - t
+    if k == 0:
+        return num_normalized, cat, measures, valid
+    return (
+        jnp.concatenate([num_normalized,
+                         jnp.zeros((k, num_normalized.shape[1]))]),
+        jnp.concatenate([cat, jnp.zeros((k, cat.shape[1]), cat.dtype)]),
+        None if measures is None else
+        jnp.concatenate([measures, jnp.zeros((k, measures.shape[1]))]),
+        jnp.concatenate([valid, jnp.zeros((k,))]),
     )
-    return fn(num_normalized, cat, measures, snippets)
+
+
+@partial(jax.jit, static_argnames=())
+def _mask_rows(num_normalized, cat, valid, snippets):
+    return predicate_mask(num_normalized, cat, snippets, valid=valid)
+
+
+_SHARDED_MASK_FNS = {}
+
+
+def _sharded_mask_fn(mesh, axis: str):
+    """Jitted shard_map mask builder, cached per (mesh, axis) so repeated
+    block evals reuse one compiled program per shape bucket instead of
+    re-tracing the shard_map every call."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    key = (mesh, axis)
+    fn = _SHARDED_MASK_FNS.get(key)
+    if fn is None:
+        fn = jax.jit(shard_map(
+            _mask_rows,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P()),
+            out_specs=P(axis),
+        ))
+        _SHARDED_MASK_FNS[key] = fn
+    return fn
+
+
+def eval_partials_sharded(mesh, axis: str, num_normalized, cat, measures,
+                          snippets, valid=None, place_fn=None):
+    """Distributed partials over the ``axis`` mesh axis — shape-agnostic.
+
+    Accepts ANY (tuple count, mesh size) combination: the tuple axis is
+    padded to the next mesh-divisible power-of-two tile with a validity mask
+    (``pad_tuple_axis``), and the padded block is placed over the mesh
+    (``place_fn``, normally ``ScanPlacement.place``). The sharded stage is
+    the predicate-mask build — the O(T·n·(l+c)) compare work; the masked
+    mask is then gathered and the final aggregation replays the unsharded
+    oracle's exact reduction over the TRUE rows, so the result is BITWISE
+    equal to ``eval_partials`` (a per-shard matmul + psum tree would round
+    differently). ``scanned`` is the validity-mask sum: an all-padding shard
+    contributes exactly nothing.
+    """
+    t = num_normalized.shape[0]
+    # Only what the sharded mask stage consumes is padded/placed; the
+    # payload never crosses devices — the reduction reads the original
+    # ``measures``.
+    num_p, cat_p, _, valid_p = pad_tuple_axis(
+        mesh.shape[axis], num_normalized, cat, None, valid)
+    # The true scanned count, computed BEFORE placement so the scalar stays
+    # on the default device (mesh-wide scalars can't join the single-device
+    # reduction program below).
+    scanned = jnp.sum(valid_p)
+    if place_fn is not None:
+        num_p, cat_p, valid_p = place_fn(num_p, cat_p, valid_p)
+    mask = _sharded_mask_fn(mesh, axis)(num_p, cat_p, valid_p, snippets)
+    # Gather the masked rows of the ORIGINAL block onto one device and
+    # replay the oracle's reduction bit for bit. (The [: t] slice drops
+    # whole padding rows; rows invalidated by a caller-supplied mask are
+    # already exactly 0.0 columns inside ``mask``. A single-device mask
+    # keeps GSPMD from re-partitioning the reduction.)
+    mask = jax.device_put(mask[:t], jax.devices()[0])
+    return _partials_from_mask(mask, measures, snippets, scanned)
+
+
+class ScanPlacement:
+    """Placement seam of the scan plane (data-plane mirror of
+    ``repro.core.store.SynopsisStore``).
+
+    Owns WHERE tuple blocks live and HOW a block is evaluated; the query
+    lifecycle (``PhysicalPlan``/``BatchExecutor``/``VerdictEngine``) only
+    ever calls ``eval_block`` and stays layout-oblivious — block placement
+    is a non-observable implementation detail, proven bitwise by
+    ``tests/test_sharded_scan.py`` rather than by convention.
+
+    The base class is local placement: blocks stay where they are and the
+    engine's per-block evaluator (pure-jnp oracle or Pallas kernel) runs
+    unpadded — bit-identical to the historical direct call.
+    ``ShardedScanPlacement`` pads/masks/places over a mesh. The ROADMAP
+    multi-host item extends exactly this seam to
+    ``jax.process_count() > 1`` (per-process addressable shards, cross-host
+    mask gather).
+    """
+
+    kind = "local"
+    mesh = None
+    axis = "data"
+
+    def __init__(self):
+        self.blocks_evaluated = 0
+        self.pad_rows = 0  # padding rows appended across all blocks
+        self.tuples_placed = 0  # true (valid) tuples routed through eval
+
+    @property
+    def n_shards(self) -> int:
+        return 1
+
+    def describe(self) -> str:
+        """Human-readable placement (``Session.explain``/``stats``)."""
+        return "local"
+
+    def place(self, num_normalized, cat, valid):
+        """Place one (padded) block's mask-stage arrays; local placement is
+        the identity. (The measure payload is never placed: the
+        oracle-order reduction always reads it where it already lives.)"""
+        return num_normalized, cat, valid
+
+    def eval_block(self, block, snippets: SnippetBatch,
+                   local_eval=None) -> Partials:
+        """Partials for one tuple block through this placement."""
+        self.blocks_evaluated += 1
+        self.tuples_placed += int(block.num_normalized.shape[0])
+        fn = local_eval if local_eval is not None else eval_partials
+        return fn(block.num_normalized, block.cat, block.measures, snippets)
+
+    def stats(self) -> dict:
+        """Operator-facing snapshot of the scan plane's placement."""
+        return {
+            "kind": self.kind,
+            "n_shards": self.n_shards,
+            "axis": self.axis,
+            "blocks_evaluated": self.blocks_evaluated,
+            "tuples_scanned": self.tuples_placed,
+            "pad_rows": self.pad_rows,
+        }
+
+
+class ShardedScanPlacement(ScanPlacement):
+    """Tuple blocks sharded over a mesh axis via ``NamedSharding`` +
+    ``jax.device_put``; evaluation through the masked, shape-agnostic
+    ``eval_partials_sharded`` — any block size over any mesh size, bitwise
+    equal to the local oracle."""
+
+    kind = "sharded"
+
+    def __init__(self, mesh, axis: str = "data"):
+        super().__init__()
+        self.mesh = mesh
+        self.axis = axis
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def describe(self) -> str:
+        return f"sharded:{self.n_shards}x{self.axis}"
+
+    def place(self, num_normalized, cat, valid):
+        """Shard the (padded) tuple axis over the mesh devices.
+
+        The single ``device_put`` call the multi-host extension will widen:
+        with ``jax.process_count() > 1`` the same ``NamedSharding`` places
+        per-process addressable shards from globally-consistent specs.
+        """
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        return tuple(jax.device_put(x, sharding)
+                     for x in (num_normalized, cat, valid))
+
+    def eval_block(self, block, snippets: SnippetBatch,
+                   local_eval=None) -> Partials:
+        t = int(block.num_normalized.shape[0])
+        self.blocks_evaluated += 1
+        self.tuples_placed += t
+        self.pad_rows += padded_tuple_count(t, self.n_shards) - t
+        return eval_partials_sharded(
+            self.mesh, self.axis,
+            block.num_normalized, block.cat, block.measures, snippets,
+            place_fn=self.place,
+        )
+
+
+def scan_placement(mesh=None, axis: str = "data") -> ScanPlacement:
+    """Build the placement for an optional mesh (the ``connect`` wiring)."""
+    if mesh is None:
+        return ScanPlacement()
+    return ShardedScanPlacement(mesh, axis)
 
 
 @partial(jax.jit, static_argnames=("exact",))

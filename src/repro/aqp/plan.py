@@ -89,6 +89,7 @@ class BatchStats:
     n_snippets_fused: int = 0  # after cross-query dedup
     eval_calls: int = 0  # one per (fused set, scanned sample batch)
     batches_scanned: int = 0
+    tuples_scanned: int = 0  # TRUE tuples evaluated (never counts padding)
 
     @property
     def dedup_ratio(self) -> float:
@@ -218,8 +219,10 @@ def plan_workload(engine, queries: Sequence[Q.AggQuery]) -> WorkloadPlan:
 class PhysicalPlan:
     """A padded fused snippet set + the lazy cumulative-partials scan.
 
-    ``eval_fn(block, padded) -> Partials`` is the per-batch evaluator (pure
-    jnp oracle, Pallas kernel, or shard_map over a mesh). Sample batches are
+    ``eval_fn(block, padded) -> Partials`` is the per-batch evaluator —
+    normally ``BatchExecutor._eval``, i.e. a ``ScanPlacement.eval_block``
+    (pure jnp oracle, Pallas kernel, or the masked shape-agnostic sharded
+    scan), so the physical plan is placement-oblivious. Sample batches are
     pulled on demand; snapshot ``b`` holds the cumulative partials of
     batches ``0..b``, and per-batch estimates are cached so replaying many
     queries against the same prefix costs one ``estimates_from_partials``.
@@ -262,6 +265,7 @@ class PhysicalPlan:
             if self.stats is not None:
                 self.stats.eval_calls += 1
                 self.stats.batches_scanned += 1
+                self.stats.tuples_scanned += len(self.batches.batch_rows[i])
         if b not in self._estimates:
             theta, beta2, _ = estimates_from_partials(
                 self._snapshots[b], self.padded

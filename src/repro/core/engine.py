@@ -11,15 +11,19 @@ Workflow per query:
   4. insert the final raw answers into the synopsis (the model learns from
      *raw* answers, never from its own outputs).
 
-The lifecycle itself lives in the shared plan IR (``repro.aqp.plan``) and
-ALL learned state lives behind the ``SynopsisStore`` protocol
-(``repro.core.store``): ``execute(q)`` is literally ``execute_many([q])[0]``,
-so the engine holds only the store, the engine-level config, and the
-sample-batch stream. Pass ``store=`` (an instance or a
-``(schema, config) -> SynopsisStore`` factory) to choose placement —
-``LocalSynopsisStore`` by default, ``ShardedSynopsisStore`` for
-per-aggregate-key placement over a mesh (``repro.verdict.connect`` wires
-this from its ``mesh=`` argument).
+The lifecycle itself lives in the shared plan IR (``repro.aqp.plan``), ALL
+learned state lives behind the ``SynopsisStore`` protocol
+(``repro.core.store``), and the scan routes through a ``ScanPlacement``
+(``repro.aqp.executor``): ``execute(q)`` is literally
+``execute_many([q])[0]``, so the engine holds only the store, the scan
+placement, the engine-level config, and the sample-batch stream. Pass
+``store=`` (an instance or a ``(schema, config) -> SynopsisStore``
+factory) and/or ``scan=`` to choose placement per plane —
+``LocalSynopsisStore`` + local ``ScanPlacement`` by default,
+``ShardedSynopsisStore`` + ``ShardedScanPlacement`` for mesh placement
+(``repro.verdict.connect`` wires both from its ``mesh=`` argument; the
+sharded scan accepts any relation/mesh combination via masked tuple
+padding).
 
 ``learning=False`` turns the engine into the NoLearn baseline of §8.1.
 """
@@ -32,7 +36,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.aqp import queries as Q
-from repro.aqp.executor import eval_partials
+from repro.aqp.executor import ScanPlacement, eval_partials
 from repro.aqp.plan import QueryResult  # noqa: F401 — canonical home is the plan IR
 from repro.aqp.relation import Relation
 from repro.aqp.sampler import SampleBatches, build_sample
@@ -78,10 +82,16 @@ class VerdictEngine:
         relation: Relation,
         config: Optional[EngineConfig] = None,
         store=None,
+        scan: Optional[ScanPlacement] = None,
     ):
         self.relation = relation
         self.schema: Schema = relation.schema
         self.config = config or EngineConfig()
+        # The scan plane's placement seam (repro.aqp.executor.ScanPlacement):
+        # every block evaluation routes through it, mirroring how all
+        # learned state routes through `store`. Local by default;
+        # `repro.verdict.connect(..., mesh=...)` passes a sharded one.
+        self.scan: ScanPlacement = scan or ScanPlacement()
         self.batches: SampleBatches = build_sample(
             relation,
             rate=self.config.sample_rate,

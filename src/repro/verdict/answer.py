@@ -116,6 +116,9 @@ class PlanReport:
     ``placement``: per aggregate-function key, where the ``SynopsisStore``
     puts (or would put) its learned state — ``"local"`` for the default
     store, ``"shard<i>:<device>"`` under per-key mesh placement.
+    ``scan_placement``: the scan plane's ``ScanPlacement`` (``"local"`` or
+    ``"sharded:<n>x<axis>"``) — with a mesh, blocks pad/mask to shard over
+    any relation size, and reported scanned-tuple counts stay true counts.
     """
 
     supported: bool
@@ -129,12 +132,14 @@ class PlanReport:
     q_buckets: dict
     fill_buckets: dict
     placement: dict = dataclasses.field(default_factory=dict)
+    scan_placement: str = "local"
 
     def __str__(self) -> str:
         head = ("supported" if self.supported
                 else f"raw-only ({self.unsupported_reason})")
         lines = [
             f"plan: {head}",
+            f"  scan={self.scan_placement}",
             f"  cells={self.n_cells} groups={self.n_groups}"
             f" truncated_groups={self.truncated_groups}",
             f"  snippets={self.n_snippets} unique={self.n_snippets_unique}"

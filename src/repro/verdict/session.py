@@ -12,11 +12,12 @@ improve/validate/record lifecycle); answers are typed
 ``repro.aqp.plan`` lifecycle the raw engine uses, so facade answers are
 bit-for-bit the engine's.
 
-One ``mesh`` shards BOTH planes: the scan (``BatchExecutor`` via
-``shard_map``+psum over the relation) and the learned state (a
-``ShardedSynopsisStore`` placing each aggregate key's synopsis on a mesh
-device). ``Session.stats()`` surfaces the resulting shard occupancy and
-ingest back-pressure.
+One ``mesh`` shards BOTH planes: the scan (a ``ShardedScanPlacement`` —
+shape-agnostic masked tuple padding, so ANY relation/mesh combination
+shards with answers bitwise-equal to the local session) and the learned
+state (a ``ShardedSynopsisStore`` placing each aggregate key's synopsis on
+a mesh device). ``Session.stats()`` surfaces the resulting scan placement,
+shard occupancy and ingest back-pressure.
 """
 from __future__ import annotations
 
@@ -25,6 +26,7 @@ from typing import Iterator, List, Optional, Sequence, Union
 
 from repro.aqp import queries as Q
 from repro.aqp.batch import BatchExecutor, BatchStats
+from repro.aqp.executor import scan_placement
 from repro.aqp.plan import (
     PhysicalPlan,
     plain_eval,
@@ -63,9 +65,11 @@ def connect(relation: Relation,
     """Open a Session over a relation (the driver-level entry point).
 
     ``mesh``: optional JAX mesh. One mesh shards both planes — the fused
-    scan runs through ``shard_map``+psum over its devices, and the learned
-    state is placed per aggregate key by a ``ShardedSynopsisStore`` over the
-    same devices. Without a mesh both stay on the default device.
+    scan runs through a ``ShardedScanPlacement`` over its devices (tuple
+    blocks of any size: padding + validity masking make divisibility a
+    non-issue), and the learned state is placed per aggregate key by a
+    ``ShardedSynopsisStore`` over the same devices. Without a mesh both
+    stay on the default device.
     """
     return Session(relation, config, mesh=mesh)
 
@@ -85,8 +89,11 @@ class Session:
         if mesh is not None:
             store = (lambda schema, cfg:
                      ShardedSynopsisStore(schema, cfg, mesh=mesh))
-        self.engine = VerdictEngine(relation, config, store=store)
-        self._executor = BatchExecutor(self.engine, mesh=mesh)
+        self.engine = VerdictEngine(relation, config, store=store,
+                                    scan=scan_placement(mesh))
+        # The executor picks up the engine's ScanPlacement, so every path —
+        # execute/execute_many/stream/serve — scans through the same seam.
+        self._executor = BatchExecutor(self.engine)
 
     # ------------------------------------------------------------ properties
     @property
@@ -144,10 +151,12 @@ class Session:
         of the key, never of arrival order).
         """
         eng = self.engine
+        scan = self._executor.placement.describe()
         wp = plan_workload(eng, [self._lower(q)])
         lp = wp.logical[0]
         if lp.plan is None:
-            return PlanReport(True, None, 0, 0, 0, 0, 0, 1.0, {}, {}, {})
+            return PlanReport(True, None, 0, 0, 0, 0, 0, 1.0, {}, {}, {},
+                              scan_placement=scan)
         n_total = lp.plan.snippets.n
         n_unique = wp.stats.n_snippets_fused
         q_buckets, fill_buckets, placement = {}, {}, {}
@@ -168,6 +177,7 @@ class Session:
             q_buckets=q_buckets,
             fill_buckets=fill_buckets,
             placement=placement,
+            scan_placement=scan,
         )
 
     # ---------------------------------------------------------------- stream
@@ -219,11 +229,15 @@ class Session:
 
         ``store``: placement kind, per-key occupancy/placement/ingest
         telemetry, and (sharded) per-shard occupancy — back-pressure and
-        shard skew at a glance. ``workload``: fusion accounting of the most
-        recent execute/execute_many call.
+        shard skew at a glance. ``scan``: the scan plane's placement plus
+        its true scanned-tuple accounting (``tuples_scanned`` counts valid
+        tuples only; ``pad_rows`` is the masking overhead). ``workload``:
+        fusion accounting of the most recent execute/execute_many call —
+        its ``tuples_scanned`` likewise never counts padding.
         """
         return {
             "store": self.engine.store.stats(),
+            "scan": self._executor.placement.stats(),
             "workload": dataclasses.asdict(self.last_stats),
         }
 
@@ -246,9 +260,11 @@ class Session:
         from repro.serving.aqp import AqpService
 
         budget = budget or ErrorBudget()
+        # No mesh= forwarding: the service's BatchExecutor adopts
+        # engine.scan, so served queries keep the (possibly sharded) scan
+        # AND accrue into the same Session.stats()["scan"] telemetry.
         return AqpService(self.engine, max_batch=max_batch,
                           target_rel_error=budget.target_rel_error,
-                          mesh=self._executor.mesh,  # keep the sharded scan
                           max_batches=budget.max_batches,
                           stop_delta=budget.delta,
                           result_wrapper=QueryAnswer.from_result)

@@ -12,9 +12,11 @@ Pins the API-redesign guarantees:
     synopsis dict (source tripwire); ``VerdictEngine.synopses`` survives
     only as a deprecated shim.
 
-Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
-``sharded-smoke`` CI job) to exercise real multi-device placement; with one
-device the same assertions still pin the single-shard degenerate case.
+Multi-device placement runs against the topology conftest.py forces (8
+fake host CPU devices by default; the CI device-count matrix also runs the
+1-device leg, where the same assertions pin the single-shard degenerate
+case). Tests that NEED several devices declare it via the shared
+``forced_devices`` fixture instead of per-job ``XLA_FLAGS`` env blocks.
 """
 import os
 import re
@@ -120,12 +122,12 @@ def test_sharded_store_places_keys_across_devices(relation, workload):
         assert len({store.shard_index(k) for k in store}) >= 2
 
 
-def test_connect_mesh_builds_sharded_store(relation):
+def test_connect_mesh_builds_sharded_store(relation, forced_devices):
     """connect(mesh=...) shards the learned state from the mesh's devices
     (the scan rides the same mesh; exercised by the facade smoke)."""
     from jax.sharding import Mesh
 
-    mesh = Mesh(np.array(jax.devices()), ("data",))
+    mesh = Mesh(np.array(forced_devices(jax.device_count())), ("data",))
     s = vd.connect(relation, _cfg(), mesh=mesh)
     assert isinstance(s.store, ShardedSynopsisStore)
     assert s.store.devices == list(np.asarray(mesh.devices).flat)
@@ -222,13 +224,14 @@ def test_bucket_ladder_floors_are_config_knobs(relation):
 
 
 # -------------------------------------------------------- operator surface
-def test_session_stats_and_explain_placement(relation, workload):
+def test_session_stats_and_explain_placement(relation, workload,
+                                             forced_devices):
     from jax.sharding import Mesh
 
-    mesh = Mesh(np.array(jax.devices()), ("data",))
-    # The sharded scan (shard_map over the tuple axis) needs every sample
-    # batch divisible by the mesh: 8000 rows * 0.15 / 5 batches = 240 = 8*30.
-    mesh_cfg = _cfg(n_batches=5)
+    mesh = Mesh(np.array(forced_devices(jax.device_count())), ("data",))
+    # No divisibility dance: the masked sharded scan pads 300-tuple sample
+    # batches (8000 rows * 0.15 / 4) over whatever mesh size is present.
+    mesh_cfg = _cfg()
     s = vd.connect(relation, _cfg())
     s.execute_many(workload[:6])
     st = s.stats()

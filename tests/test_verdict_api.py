@@ -218,6 +218,50 @@ def test_online_answers_rides_the_shared_scan(relation):
     assert outs[-1][1].batches_used == eng.batches.n_batches
 
 
+def test_mesh_session_indivisible_relation_matches_local_bitwise(
+        relation, forced_devices):
+    """A Session over a mesh whose size does NOT divide the sample batches
+    (180-tuple blocks here) answers bitwise-identically to the local
+    session — the masked, padded sharded scan makes layout non-observable —
+    and explain()/stats() report TRUE scanned-tuple counts, never padded
+    tiles."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n_dev = min(8, jax.device_count())
+    mesh = Mesh(np.array(forced_devices(n_dev)), ("data",))
+    local = vd.connect(relation, _cfg())
+    shard = vd.connect(relation, _cfg(), mesh=mesh)
+    batch_sizes = [len(b) for b in shard.engine.batches.batch_rows]
+    assert any(t % n_dev != 0 for t in batch_sizes) or n_dev == 1
+    qs = W.make_workload(1, relation.schema, 8,
+                         agg_kinds=("AVG", "COUNT", "SUM"),
+                         cat_pred_prob=0.3)
+    a_local = local.execute_many(qs)
+    a_shard = shard.execute_many(qs)
+    for a, b in zip(a_local, a_shard):
+        assert dataclasses.asdict(a) == dataclasses.asdict(b)  # bitwise
+        # tuples_scanned is the true per-query count: the sum of the real
+        # (un-padded) block sizes it consumed.
+        assert b.tuples_scanned == sum(batch_sizes[:b.batches_used])
+    # explain() names the scan placement; stats() counts true tuples only.
+    rep = shard.explain(shard.query().avg("v0"))
+    assert rep.scan_placement == f"sharded:{n_dev}xdata"
+    assert f"scan=sharded:{n_dev}xdata" in str(rep)
+    assert local.explain(local.query().avg("v0")).scan_placement == "local"
+    st = shard.stats()
+    true_scanned = sum(batch_sizes[:max(r.batches_used for r in a_shard)])
+    assert st["scan"]["kind"] == "sharded"
+    assert st["scan"]["n_shards"] == n_dev
+    assert st["scan"]["tuples_scanned"] == true_scanned
+    assert st["workload"]["tuples_scanned"] == true_scanned
+    if n_dev > 1:
+        assert st["scan"]["pad_rows"] > 0  # padding happened, invisibly
+
+
 def test_answer_value_convenience(relation):
     s = vd.connect(relation, _cfg())
     a = s.execute(s.query().count())
