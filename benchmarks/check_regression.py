@@ -54,6 +54,11 @@ def current_metrics(improve_report: str = "", shard_report: str = "") -> dict:
 
         imp_rows, _ = improve_bench.bench(smoke=True)
         rows.update(dict(imp_rows))
+    # Fused-scan gate metrics: bitwise parity + BlockSpec roofline fraction
+    # (both machine-portable; no wall-clock involved).
+    import kernels_bench
+
+    rows.update(dict(kernels_bench.scan_metrics()))
     return rows
 
 
@@ -91,6 +96,13 @@ def update(rows: dict) -> dict:
         # Layout is non-observable: the masked padded sharded scan must stay
         # bitwise-equal to the unsharded oracle for indivisible blocks.
         "scan/padded_parity": True,
+        # The fused masked-scan kernel must stay bitwise-equal to the jnp
+        # oracle (local, valid-masked and aggregation-only legs) ...
+        "scan/kernel_bitwise_parity": True,
+        # ... and its BlockSpec HBM traffic must stay within a constant of
+        # the once-streamed relation floor (un-fusing the mask collapses
+        # this fraction of achievable HBM peak).
+        "scan/bytes_per_sec_frac_of_peak": True,
     }
     return {
         "tolerance": 0.25,

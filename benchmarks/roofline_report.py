@@ -70,4 +70,14 @@ def run():
     if rs:
         out.append(("roofline/mean_useful_ratio",
                     sum(r["useful_ratio"] for r in rs) / ok))
+    # Scan-plane roofline: fused-kernel HBM traffic model vs the compiled
+    # jnp oracle's bytes accessed, plus the sharded mask build's collective
+    # bytes (repro.launch.hlo_analysis) — live numbers, no dryrun needed.
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import kernels_bench
+
+    out.extend(kernels_bench.scan_roofline_rows())
     return out

@@ -2,8 +2,12 @@
 
 The TPU-idiomatic form of a multi-snippet scan: build a (tuples × snippets)
 predicate mask with vectorized compares, then aggregate with mask^T @ values on
-the MXU (see ``repro.kernels.range_mask_agg`` for the Pallas kernel; this module
-is the pure-jnp oracle and the host-side accumulation / estimate logic).
+the MXU (see ``repro.kernels.fused_masked_scan`` for the fused Pallas kernel;
+this module is the pure-jnp oracle and the host-side accumulation / estimate
+logic). The canonical reduction is ``masked_tile_fold`` — a fixed
+ascending-tile-order fold shared by the oracle, the gathered sharded mask, and
+the kernel's sequential-grid accumulator, which is what makes all three paths
+bitwise-identical by construction.
 
 Distribution: the scan is shape-agnostic. A tuple block of ANY size runs over
 a mesh of ANY size: the tuple axis is padded to a power-of-two tile divisible
@@ -34,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import AVG, FREQ, RawAnswer, SnippetBatch
+from repro.kernels import RANGE_EPS, SCAN_TILE_Q, SCAN_TILE_T
 
 BIG_BETA2 = 1e12  # raw error for snippets with no support in the scanned sample
 
@@ -71,8 +76,8 @@ def predicate_mask(num_normalized, cat, snippets: SnippetBatch, valid=None):
     """
     x = num_normalized  # (T, l), normalized units — same as snippet lo/hi
     m_num = jnp.all(
-        (x[:, None, :] >= snippets.lo[None, :, :] - 1e-12)
-        & (x[:, None, :] <= snippets.hi[None, :, :] + 1e-12),
+        (x[:, None, :] >= snippets.lo[None, :, :] - RANGE_EPS)
+        & (x[:, None, :] <= snippets.hi[None, :, :] + RANGE_EPS),
         axis=-1,
     )
     mask = m_num
@@ -87,19 +92,68 @@ def predicate_mask(num_normalized, cat, snippets: SnippetBatch, valid=None):
     return mask
 
 
+def masked_tile_fold(mask, payload, tile_t: int = SCAN_TILE_T,
+                     tile_q: int = SCAN_TILE_Q):
+    """out[q, p] = sum_t mask[t, q] * payload[t, p] — the canonical
+    fixed-tile-order reduction of the scan plane.
+
+    Zero-pads BOTH axes to tile multiples and, per snippet tile, left-folds
+    the per-tile (tile_t, tile_q) x (tile_t, P) dot partials in ascending
+    tuple-tile order — EXACTLY the accumulation the fused Pallas kernel's
+    grid performs (``repro.kernels.fused_masked_scan``), so the jnp oracle
+    and the kernel agree bit for bit by construction instead of by rounding
+    luck.  Every dot has the same FIXED shape: XLA's CPU matmul picks its
+    contraction order by operand shape, so fixed-shape tiles are what makes
+    per-snippet partials bitwise independent of block size AND of how many
+    snippets ride along (Q-padding invariance).  Padding rows/columns are
+    zeros and sliced away — they contribute exact-zero partials.  (A single
+    big matmul would round differently — fp addition is not associative.)
+    """
+    t, q = mask.shape
+    p = payload.shape[1]
+    pad_t = (-t) % tile_t
+    pad_q = (-q) % tile_q
+    if pad_t:
+        mask = jnp.concatenate([mask, jnp.zeros((pad_t, q), mask.dtype)])
+        payload = jnp.concatenate(
+            [payload, jnp.zeros((pad_t, p), payload.dtype)])
+    if pad_q:
+        mask = jnp.concatenate(
+            [mask, jnp.zeros((mask.shape[0], pad_q), mask.dtype)], axis=1)
+    dn = (((0,), (0,)), ((), ()))
+    cols = []
+    for j in range(mask.shape[1] // tile_q):
+        sq = slice(j * tile_q, (j + 1) * tile_q)
+        acc = None
+        for i in range(mask.shape[0] // tile_t):
+            st = slice(i * tile_t, (i + 1) * tile_t)
+            part = jax.lax.dot_general(mask[st, sq], payload[st], dn,
+                                       preferred_element_type=payload.dtype)
+            acc = part if acc is None else acc + part
+        if acc is None:  # zero-row block
+            acc = jnp.zeros((tile_q, p), payload.dtype)
+        cols.append(acc)
+    out = jnp.concatenate(cols) if cols else jnp.zeros((0, p), payload.dtype)
+    return out[:q]
+
+
 @jax.jit
 def _partials_from_mask(mask, measures, snippets: SnippetBatch,
                         scanned) -> Partials:
-    """The mask → sufficient-statistics aggregation, factored out so the
-    sharded path can replay the oracle's EXACT reduction (same jitted ops on
-    identical values ⇒ bitwise-identical partials)."""
-    per_measure_sum = mask.T @ measures  # (n, m)
-    per_measure_sq = mask.T @ (measures * measures)  # (n, m)
+    """The mask → sufficient-statistics aggregation, factored out so every
+    path (local oracle, gathered sharded mask, fused kernel) performs the
+    SAME reduction: the payload packs [measures, measures², 1] and the
+    contraction is the canonical ``masked_tile_fold`` — the fused kernel's
+    own accumulation order — so all paths are bitwise-identical."""
+    t, m = measures.shape
+    payload = jnp.concatenate(
+        [measures, measures * measures, jnp.ones((t, 1), measures.dtype)],
+        axis=1)  # (T, 2m+1)
+    out = masked_tile_fold(mask, payload)  # (n, 2m+1)
     idx = snippets.measure[:, None]
-    sums = jnp.take_along_axis(per_measure_sum, idx, axis=1)[:, 0]
-    sumsq = jnp.take_along_axis(per_measure_sq, idx, axis=1)[:, 0]
-    count = jnp.sum(mask, axis=0)
-    return Partials(sums, sumsq, count, scanned)
+    sums = jnp.take_along_axis(out[:, :m], idx, axis=1)[:, 0]
+    sumsq = jnp.take_along_axis(out[:, m:2 * m], idx, axis=1)[:, 0]
+    return Partials(sums, sumsq, out[:, 2 * m], scanned)
 
 
 @partial(jax.jit, static_argnames=())
@@ -195,7 +249,7 @@ def _sharded_mask_fn(mesh, axis: str):
 
 
 def eval_partials_sharded(mesh, axis: str, num_normalized, cat, measures,
-                          snippets, valid=None, place_fn=None):
+                          snippets, valid=None, place_fn=None, agg_fn=None):
     """Distributed partials over the ``axis`` mesh axis — shape-agnostic.
 
     Accepts ANY (tuple count, mesh size) combination: the tuple axis is
@@ -208,6 +262,13 @@ def eval_partials_sharded(mesh, axis: str, num_normalized, cat, measures,
     equal to ``eval_partials`` (a per-shard matmul + psum tree would round
     differently). ``scanned`` is the validity-mask sum: an all-padding shard
     contributes exactly nothing.
+
+    ``agg_fn``: optional replacement for the gathered-mask aggregation,
+    called as ``agg_fn(mask, measures, snippets, scanned)``. The kernel path
+    passes ``repro.kernels.fused_masked_scan.masked_partials_fused`` here —
+    the same canonical tile fold run inside a Pallas kernel, so the result
+    stays bitwise-identical while the aggregation exercises the kernel
+    (``use_kernels=True`` composing with a mesh).
     """
     t = num_normalized.shape[0]
     # Only what the sharded mask stage consumes is padded/placed; the
@@ -228,7 +289,47 @@ def eval_partials_sharded(mesh, axis: str, num_normalized, cat, measures,
     # already exactly 0.0 columns inside ``mask``. A single-device mask
     # keeps GSPMD from re-partitioning the reduction.)
     mask = jax.device_put(mask[:t], jax.devices()[0])
+    if agg_fn is not None:
+        return agg_fn(mask, measures, snippets, scanned)
     return _partials_from_mask(mask, measures, snippets, scanned)
+
+
+def _kernel_agg_for(local_eval):
+    """Map the engine's per-block evaluator to the matching gathered-mask
+    aggregation (None -> the jnp oracle ``_partials_from_mask``).
+
+    This is how ``use_kernels=True`` composes with a mesh: the sharded mask
+    build stays shard_map'd, and the post-gather fold runs through the
+    aggregation-only Pallas kernel instead of silently falling back to jnp.
+    """
+    if local_eval is None or local_eval is eval_partials:
+        return None
+    try:
+        from repro.kernels.fused_masked_scan import ops as fms_ops
+    except Exception:  # pragma: no cover - pallas unavailable
+        return None
+    if local_eval is fms_ops.eval_partials_fused:
+        return fms_ops.masked_partials_fused
+    return None
+
+
+def _evaluator_name(local_eval) -> str:
+    """Stable name of a per-block evaluator for placement telemetry."""
+    if local_eval is None or local_eval is eval_partials:
+        return "oracle"
+    try:
+        from repro.kernels.fused_masked_scan import ops as fms_ops
+        if local_eval is fms_ops.eval_partials_fused:
+            return "fused_masked_scan"
+    except Exception:  # pragma: no cover - pallas unavailable
+        pass
+    try:
+        from repro.kernels.range_mask_agg import ops as rma_ops
+        if local_eval is rma_ops.eval_partials_kernel:
+            return "range_mask_agg"
+    except Exception:  # pragma: no cover - pallas unavailable
+        pass
+    return getattr(local_eval, "__name__", "custom")
 
 
 class ScanPlacement:
@@ -258,6 +359,7 @@ class ScanPlacement:
         self.blocks_evaluated = 0
         self.pad_rows = 0  # padding rows appended across all blocks
         self.tuples_placed = 0  # true (valid) tuples routed through eval
+        self.last_evaluator = None  # evaluator actually used by eval_block
 
     @property
     def n_shards(self) -> int:
@@ -273,11 +375,17 @@ class ScanPlacement:
         oracle-order reduction always reads it where it already lives.)"""
         return num_normalized, cat, valid
 
+    def evaluator_for(self, local_eval) -> str:
+        """Name of the evaluator ``eval_block`` WILL use for ``local_eval``
+        — what ``Session.explain`` reports before any block runs."""
+        return _evaluator_name(local_eval)
+
     def eval_block(self, block, snippets: SnippetBatch,
                    local_eval=None) -> Partials:
         """Partials for one tuple block through this placement."""
         self.blocks_evaluated += 1
         self.tuples_placed += int(block.num_normalized.shape[0])
+        self.last_evaluator = self.evaluator_for(local_eval)
         fn = local_eval if local_eval is not None else eval_partials
         return fn(block.num_normalized, block.cat, block.measures, snippets)
 
@@ -290,6 +398,7 @@ class ScanPlacement:
             "blocks_evaluated": self.blocks_evaluated,
             "tuples_scanned": self.tuples_placed,
             "pad_rows": self.pad_rows,
+            "evaluator": self.last_evaluator,
         }
 
 
@@ -326,16 +435,26 @@ class ShardedScanPlacement(ScanPlacement):
         return tuple(jax.device_put(x, sharding)
                      for x in (num_normalized, cat, valid))
 
+    def evaluator_for(self, local_eval) -> str:
+        """Sharded blocks always build the mask via shard_map; the kernel,
+        when requested AND supported, runs the post-gather aggregation —
+        never silently dropped without the name saying so."""
+        if _kernel_agg_for(local_eval) is not None:
+            return "sharded_mask+kernel_agg"
+        return "sharded_mask+oracle_agg"
+
     def eval_block(self, block, snippets: SnippetBatch,
                    local_eval=None) -> Partials:
         t = int(block.num_normalized.shape[0])
         self.blocks_evaluated += 1
         self.tuples_placed += t
         self.pad_rows += padded_tuple_count(t, self.n_shards) - t
+        self.last_evaluator = self.evaluator_for(local_eval)
         return eval_partials_sharded(
             self.mesh, self.axis,
             block.num_normalized, block.cat, block.measures, snippets,
             place_fn=self.place,
+            agg_fn=_kernel_agg_for(local_eval),
         )
 
 

@@ -110,9 +110,13 @@ class VerdictEngine:
             self.store = store
         self._eval_fn = eval_partials
         if self.config.use_kernels:
-            from repro.kernels.range_mask_agg import ops as rma_ops
+            # The fused masked-scan kernel: predicate compare, categorical
+            # membership, validity masking and partials accumulation in one
+            # VMEM pass — bitwise-equal to ``eval_partials`` in interpret
+            # mode (the canonical ``masked_tile_fold`` reduction).
+            from repro.kernels.fused_masked_scan import ops as fms_ops
 
-            self._eval_fn = rma_ops.eval_partials_kernel
+            self._eval_fn = fms_ops.eval_partials_fused
 
     # ------------------------------------------------------------- synopses
     @property

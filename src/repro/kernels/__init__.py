@@ -6,13 +6,57 @@ tiling) / ops.py (jit'd public wrapper with padding + epilogue) / ref.py
 ``interpret=True``; on TPU the same BlockSpecs define the VMEM working set.
 
 Kernels:
-  se_covariance   -- blocked closed-form SE double-integral covariance build
-                     (offline learning hot loop: O(n^2 l) erf evaluations).
-  range_mask_agg  -- (tuples x snippets) predicate mask built in VMEM, then
-                     mask^T @ [measures, measures^2, 1] on the MXU (the AQP
-                     scan hot loop).
-  gp_batch_infer  -- gamma^2 = diag(K Sigma^-1 K^T) + prior blend, tiled on
-                     the MXU (the query-time inference hot loop, Eq. 11/12).
+  se_covariance    -- blocked closed-form SE double-integral covariance build
+                      (offline learning hot loop: O(n^2 l) erf evaluations).
+  fused_masked_scan-- THE scan hot loop: one pass that streams relation tiles
+                      through VMEM — predicate compare (RANGE_EPS widened),
+                      categorical membership (one-hot MXU matmul), per-tuple
+                      validity mask, and [measures, measures^2, 1] partials
+                      accumulation, fused.  Accumulation is a FIXED tile-order
+                      fold over SCAN_TILE_T tuple tiles — the SAME reduction
+                      ``repro.aqp.executor._partials_from_mask`` performs —
+                      so kernel partials are BITWISE equal to the
+                      ``eval_partials`` oracle under interpret mode (f64),
+                      for any block size and under local AND sharded
+                      placement (``tests/test_fused_scan.py``).
+  range_mask_agg   -- legacy partial-coverage scan kernel ((tuples x snippets)
+                      mask then mask^T @ payload); superseded by
+                      fused_masked_scan on the engine path but kept as a
+                      stable public wrapper (now valid-mask aware and on the
+                      shared RANGE_EPS).
+  gp_batch_infer   -- gamma^2 = diag(K Sigma^-1 K^T) + prior blend, tiled on
+                      the MXU (the query-time inference hot loop, Eq. 11/12).
+
+Parity guarantees vs the INTERPRET flag:
+  INTERPRET=True (this CPU container): kernel bodies execute as jnp ops in
+  f64; the fused scan's fixed tile-order fold makes its partials bitwise
+  equal to the jnp oracle — the repo-wide raw-answer-consistency discipline.
+  INTERPRET=False (real TPU): the same BlockSpecs compile to Mosaic; the MXU
+  has no f64 path, so the fused scan accumulates in f32 and parity degrades
+  to allclose — the bitwise gate applies to interpret mode only.
+
+Shared numeric constants (imported by kernels, the executor oracle and the
+refs — ONE epsilon, ONE tile, so kernel and oracle can never drift):
+
+  RANGE_EPS    -- predicate range-boundary widening. All range compares are
+                  ``lo - RANGE_EPS <= x <= hi + RANGE_EPS``; kernel, oracle
+                  and ref share this constant (a kernel-local 1e-7 once made
+                  ``use_kernels=True`` change answers near snippet bounds).
+  SCAN_TILE_T  -- the tuple-axis accumulation tile of the scan plane. The
+                  oracle's reduction and the fused kernel's grid both fold
+                  (SCAN_TILE_T x SCAN_TILE_Q) dot partials in ascending tile
+                  order, so their sums agree bit for bit by construction.
+  SCAN_TILE_Q  -- the snippet-axis tile. Every dot in the canonical fold has
+                  the FIXED shape (SCAN_TILE_T, SCAN_TILE_Q) x (SCAN_TILE_T,
+                  P): XLA's CPU matmul picks its contraction order by shape,
+                  so only fixed-shape per-tile dots make per-snippet partials
+                  bitwise independent of how many snippets ride along
+                  (Q-padding invariance — pinned by the verdict-API tests).
 """
 
 INTERPRET = True  # CPU container: flip to False on real TPU.
+
+RANGE_EPS = 1e-12  # shared predicate-boundary epsilon (kernel == oracle == ref)
+
+SCAN_TILE_T = 512  # tuple-axis tile of the scan's fixed-order accumulation fold
+SCAN_TILE_Q = 128  # snippet-axis tile (= core.types.SNIPPET_TILE serve tiles)

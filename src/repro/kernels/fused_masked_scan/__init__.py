@@ -1,0 +1,15 @@
+from repro.kernels.fused_masked_scan.ops import (
+    eval_partials_fused,
+    masked_partials_fused,
+)
+from repro.kernels.fused_masked_scan.ref import (
+    fused_masked_scan_ref,
+    masked_tile_fold,
+)
+
+__all__ = [
+    "eval_partials_fused",
+    "masked_partials_fused",
+    "fused_masked_scan_ref",
+    "masked_tile_fold",
+]

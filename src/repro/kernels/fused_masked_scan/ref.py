@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused masked-scan kernel.
+
+Mirrors the kernel's semantics exactly — shared ``RANGE_EPS`` boundary
+widening, categorical membership, validity masking — but reduces with the
+SAME fixed ascending-tile-order fold over ``SCAN_TILE_T`` tuple tiles, so in
+f64 the reference is bitwise-equal to the interpret-mode kernel (a single
+big matmul would round differently; the fold IS the canonical reduction of
+the scan plane, see ``repro.aqp.executor._partials_from_mask``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.aqp.executor import masked_tile_fold  # the canonical fold
+from repro.kernels import RANGE_EPS, SCAN_TILE_T
+
+__all__ = ["fused_masked_scan_ref", "masked_tile_fold"]
+
+
+def fused_masked_scan_ref(x, codes, valid, payload, lo, hi, cat,
+                          tile_t: int = SCAN_TILE_T):
+    """x: (T,L); codes: (T,C) int; valid: (T,1); payload: (T,P);
+    lo/hi: (Q,L); cat: (Q, C*V) 0/1 -> (Q,P)."""
+    dt = payload.dtype
+    mask = jnp.all(
+        (x[:, None, :] >= lo[None, :, :] - RANGE_EPS)
+        & (x[:, None, :] <= hi[None, :, :] + RANGE_EPS),
+        axis=-1,
+    )  # (T, Q)
+    c = codes.shape[1]
+    vmax = cat.shape[1] // max(c, 1)
+    for k in range(c):
+        catk = cat[:, k * vmax:(k + 1) * vmax]  # (Q, V)
+        mk = jnp.take(catk, codes[:, k], axis=1) > 0.5  # (Q, T)
+        mask = mask & mk.T
+    m = mask.astype(dt) * valid.astype(dt)
+    return masked_tile_fold(m, payload, tile_t)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import RANGE_EPS
+
 
 def _rma_kernel(x_ref, payload_ref, lo_ref, hi_ref, em_ref, out_ref, *, n_dims: int):
     t = pl.program_id(1)
@@ -26,7 +28,8 @@ def _rma_kernel(x_ref, payload_ref, lo_ref, hi_ref, em_ref, out_ref, *, n_dims: 
     mask = None
     for k in range(n_dims):
         xk = x[:, k][:, None]  # (TT, 1)
-        mk = (xk >= lo_ref[:, k][None, :] - 1e-7) & (xk <= hi_ref[:, k][None, :] + 1e-7)
+        mk = ((xk >= lo_ref[:, k][None, :] - RANGE_EPS)
+              & (xk <= hi_ref[:, k][None, :] + RANGE_EPS))
         mask = mk if mask is None else (mask & mk)
     m = em_ref[...] if mask is None else mask.astype(x.dtype) * em_ref[...]
     acc = jax.lax.dot_general(

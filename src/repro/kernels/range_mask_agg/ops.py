@@ -58,8 +58,15 @@ def categorical_premask(cat_codes, snip_cat):
 
 
 @jax.jit
-def eval_partials_kernel(num_normalized, cat, measures, snippets):
-    """Kernel-backed drop-in for ``repro.aqp.executor.eval_partials``."""
+def eval_partials_kernel(num_normalized, cat, measures, snippets, valid=None):
+    """Kernel-backed drop-in for ``repro.aqp.executor.eval_partials``.
+
+    ``valid``: optional (T,) 0/1 per-tuple validity mask for zero-padded
+    blocks. Invalid rows are zeroed out of every snippet column and
+    ``scanned`` is the mask sum — the TRUE tuple count, never the padded
+    shape (reporting ``float(t_n)`` here deflated every CLT error bound on
+    padded blocks).
+    """
     from repro.aqp.executor import Partials
 
     t_n, m = measures.shape
@@ -68,6 +75,11 @@ def eval_partials_kernel(num_normalized, cat, measures, snippets):
         [meas32, meas32 * meas32, jnp.ones((t_n, 1), jnp.float32)], axis=1
     )  # (T, 2M+1)
     extra = categorical_premask(cat, snippets.cat) if cat.shape[1] else None
+    scanned = (jnp.asarray(float(t_n)) if valid is None else jnp.sum(valid))
+    if valid is not None:
+        v = valid.astype(jnp.float32)[:, None]
+        extra = v * jnp.ones((t_n, snippets.lo.shape[0]), jnp.float32) \
+            if extra is None else extra * v
     out = range_mask_agg(
         num_normalized, payload, snippets.lo, snippets.hi, extra
     ).astype(jnp.float64)  # (Q, 2M+1)
@@ -75,4 +87,4 @@ def eval_partials_kernel(num_normalized, cat, measures, snippets):
     sums = jnp.take_along_axis(out[:, :m], idx, axis=1)[:, 0]
     sumsq = jnp.take_along_axis(out[:, m : 2 * m], idx, axis=1)[:, 0]
     count = out[:, 2 * m]
-    return Partials(sums, sumsq, count, jnp.asarray(float(t_n)))
+    return Partials(sums, sumsq, count, scanned)

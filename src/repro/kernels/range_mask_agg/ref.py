@@ -3,6 +3,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import RANGE_EPS
+
 
 def range_mask_agg_ref(x, payload, lo, hi, extra_mask):
     """x: (T,L); payload: (T,P); lo/hi: (Q,L); extra_mask: (T,Q) -> (Q,P).
@@ -10,8 +12,8 @@ def range_mask_agg_ref(x, payload, lo, hi, extra_mask):
     out[q, p] = sum_t [all_k lo[q,k] <= x[t,k] <= hi[q,k]] * extra[t,q] * payload[t,p]
     """
     m = jnp.all(
-        (x[:, None, :] >= lo[None, :, :] - 1e-7)
-        & (x[:, None, :] <= hi[None, :, :] + 1e-7),
+        (x[:, None, :] >= lo[None, :, :] - RANGE_EPS)
+        & (x[:, None, :] <= hi[None, :, :] + RANGE_EPS),
         axis=-1,
     ).astype(payload.dtype)
     m = m * extra_mask.astype(payload.dtype)

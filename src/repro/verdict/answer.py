@@ -119,6 +119,11 @@ class PlanReport:
     ``scan_placement``: the scan plane's ``ScanPlacement`` (``"local"`` or
     ``"sharded:<n>x<axis>"``) — with a mesh, blocks pad/mask to shard over
     any relation size, and reported scanned-tuple counts stay true counts.
+    ``scan_evaluator``: the per-block evaluator the placement WILL route
+    through — ``"oracle"`` (pure jnp), ``"fused_masked_scan"`` (the fused
+    Pallas kernel), or under a mesh ``"sharded_mask+{kernel,oracle}_agg"``
+    (shard_map mask build + kernel/jnp aggregation of the gathered mask) —
+    so ``explain`` never misreports a silently-dropped kernel request.
     """
 
     supported: bool
@@ -133,13 +138,14 @@ class PlanReport:
     fill_buckets: dict
     placement: dict = dataclasses.field(default_factory=dict)
     scan_placement: str = "local"
+    scan_evaluator: str = "oracle"
 
     def __str__(self) -> str:
         head = ("supported" if self.supported
                 else f"raw-only ({self.unsupported_reason})")
         lines = [
             f"plan: {head}",
-            f"  scan={self.scan_placement}",
+            f"  scan={self.scan_placement} evaluator={self.scan_evaluator}",
             f"  cells={self.n_cells} groups={self.n_groups}"
             f" truncated_groups={self.truncated_groups}",
             f"  snippets={self.n_snippets} unique={self.n_snippets_unique}"

@@ -152,11 +152,12 @@ class Session:
         """
         eng = self.engine
         scan = self._executor.placement.describe()
+        evaluator = self._executor.placement.evaluator_for(eng._eval_fn)
         wp = plan_workload(eng, [self._lower(q)])
         lp = wp.logical[0]
         if lp.plan is None:
             return PlanReport(True, None, 0, 0, 0, 0, 0, 1.0, {}, {}, {},
-                              scan_placement=scan)
+                              scan_placement=scan, scan_evaluator=evaluator)
         n_total = lp.plan.snippets.n
         n_unique = wp.stats.n_snippets_fused
         q_buckets, fill_buckets, placement = {}, {}, {}
@@ -178,6 +179,7 @@ class Session:
             fill_buckets=fill_buckets,
             placement=placement,
             scan_placement=scan,
+            scan_evaluator=evaluator,
         )
 
     # ---------------------------------------------------------------- stream

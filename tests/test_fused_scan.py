@@ -1,0 +1,297 @@
+"""Fused masked-scan kernel: bitwise oracle parity + the drift regressions.
+
+Pins the tentpole guarantees of ``repro.kernels.fused_masked_scan``:
+
+  - ``eval_partials_fused`` (predicate compare + categorical membership +
+    validity mask + partials accumulation in ONE Pallas pass) is BITWISE
+    equal to the pure-jnp ``eval_partials`` oracle across the full
+    {1, 7, 63, 64, 100, 1000} tuple matrix, under BOTH local and sharded
+    placement (the kernel's sequential tuple-tile grid performs the scan
+    plane's canonical ``masked_tile_fold`` — parity by construction, pinned
+    here with ``assert_array_equal``, not allclose);
+  - the shared ``RANGE_EPS`` boundary epsilon: kernel, oracle and ref agree
+    at exactly ``lo``, at ``lo ± 1e-12`` and at ``lo ± 1e-7`` (regression:
+    the range_mask_agg kernel used ±1e-7 while the oracle used ±1e-12, so
+    boundary tuples disagreed between paths);
+  - ``eval_partials_kernel`` accepts ``valid=`` and reports ``scanned`` as
+    the mask sum (regression: it reported the padded shape, silently
+    deflating every CLT error bound on padded blocks);
+  - ``ShardedScanPlacement`` routes a kernel ``local_eval`` through the
+    kernel aggregation and REPORTS the evaluator it used (regression: the
+    kernel request was silently dropped and ``explain`` misreported).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.aqp.executor import (
+    ScanPlacement,
+    ShardedScanPlacement,
+    eval_partials,
+    eval_partials_sharded,
+    masked_tile_fold,
+    pad_tuple_axis,
+    scan_placement,
+)
+from repro.aqp.relation import Relation
+from repro.core.types import Schema, make_snippets, pad_snippets
+from repro.kernels import RANGE_EPS, SCAN_TILE_T
+from repro.kernels.fused_masked_scan import (
+    eval_partials_fused,
+    fused_masked_scan_ref,
+    masked_partials_fused,
+)
+from repro.kernels.fused_masked_scan.kernel import fused_masked_scan_pallas
+
+from test_sharded_scan import (
+    DEVICE_COUNTS,
+    SCHEMA,
+    TUPLE_COUNTS,
+    _assert_partials_bitwise,
+    _block,
+    _snippets,
+)
+
+
+# ------------------------------------------------------------ parity matrix
+@pytest.mark.parametrize("t", TUPLE_COUNTS)
+def test_fused_local_parity_matrix_bitwise(t):
+    """The acceptance oracle, local leg: fused-kernel partials == pure-jnp
+    oracle, bit for bit, for every tuple count — including blocks smaller
+    than one kernel tile and blocks spanning several."""
+    num, cat, measures, snippets = *_block(t, seed=t), _snippets()
+    oracle = eval_partials(num, cat, measures, snippets)
+    fused = eval_partials_fused(num, cat, measures, snippets)
+    _assert_partials_bitwise(fused, oracle)
+    assert float(fused.scanned) == float(t)
+
+
+@pytest.mark.parametrize("n_dev", DEVICE_COUNTS)
+@pytest.mark.parametrize("t", TUPLE_COUNTS)
+def test_fused_sharded_parity_matrix_bitwise(t, n_dev, forced_devices):
+    """The acceptance oracle, mesh leg: sharded mask build + kernel
+    aggregation == unsharded oracle, bit for bit, for every (tuple count,
+    mesh size) cell — ``use_kernels=True`` composing with a mesh."""
+    mesh = Mesh(np.array(forced_devices(n_dev)), ("data",))
+    num, cat, measures, snippets = *_block(t, seed=t), _snippets()
+    oracle = eval_partials(num, cat, measures, snippets)
+    sharded = eval_partials_sharded(
+        mesh, "data", num, cat, measures, snippets,
+        agg_fn=masked_partials_fused)
+    _assert_partials_bitwise(sharded, oracle)
+    assert float(sharded.scanned) == float(t)
+
+
+def test_fused_valid_mask_parity_bitwise():
+    """The ``valid=`` leg: padded blocks produce identical bits through the
+    kernel, and ``scanned`` is the mask sum in both paths."""
+    snippets = _snippets()
+    num_p, cat_p, meas_p, valid = pad_tuple_axis(8, *_block(100, seed=23))
+    oracle = eval_partials(num_p, cat_p, meas_p, snippets, valid)
+    fused = eval_partials_fused(num_p, cat_p, meas_p, snippets, valid)
+    _assert_partials_bitwise(fused, oracle)
+    assert float(fused.scanned) == 100.0
+
+
+def test_fused_cat_free_schema_bitwise():
+    """Schemas with no categorical dims run through the kernel's dummy
+    all-member column and still match the oracle bitwise."""
+    schema = Schema(num_lo=(0.0,), num_hi=(1.0,), cat_sizes=(),
+                    n_measures=1)
+    rng = np.random.default_rng(29)
+    num = jnp.asarray(rng.uniform(0, 1, (200, 1)))
+    cat = jnp.zeros((200, 0), jnp.int32)
+    measures = jnp.asarray(rng.normal(size=(200, 1)))
+    snippets = pad_snippets(make_snippets(
+        schema, agg=[0, 1], measure=[0, 0],
+        num_ranges=[{0: (0.2, 0.8)}, {0: (0.0, 0.5)}]))
+    _assert_partials_bitwise(
+        eval_partials_fused(num, cat, measures, snippets),
+        eval_partials(num, cat, measures, snippets))
+
+
+def test_fused_kernel_matches_its_ref_bitwise():
+    """Raw kernel vs its pure-jnp ref (pre-padded inputs, no epilogue):
+    the kernel package's own parity contract at the array level."""
+    rng = np.random.default_rng(31)
+    t, l, c, v, p, q = 1024, 2, 1, 4, 3, 128
+    x = jnp.asarray(rng.uniform(0, 1, (t, l)))
+    codes = jnp.asarray(rng.integers(0, v, (t, c)), jnp.int32)
+    valid = jnp.asarray((rng.uniform(size=(t, 1)) > 0.1).astype(np.float64))
+    payload = jnp.asarray(rng.normal(size=(t, p)))
+    lo = jnp.asarray(rng.uniform(0, 0.5, (q, l)))
+    hi = lo + 0.4
+    cat = jnp.asarray(rng.integers(0, 2, (q, c * v)).astype(np.float64))
+    out_k = fused_masked_scan_pallas(x, codes, valid, payload, lo, hi, cat,
+                                     tile_t=SCAN_TILE_T, tile_q=q,
+                                     interpret=True)
+    out_r = fused_masked_scan_ref(x, codes, valid, payload, lo, hi, cat)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+
+
+def test_masked_tile_fold_is_the_canonical_reduction():
+    """``_partials_from_mask``'s contraction is ``masked_tile_fold``: one
+    fold shared by oracle, gathered sharded mask, and kernel. Padding the
+    tuple axis with zero rows never changes a single bit."""
+    rng = np.random.default_rng(37)
+    mask = jnp.asarray((rng.uniform(size=(700, 8)) > 0.5).astype(np.float64))
+    payload = jnp.asarray(rng.normal(size=(700, 5)))
+    base = masked_tile_fold(mask, payload)
+    padded = masked_tile_fold(
+        jnp.concatenate([mask, jnp.zeros((324, 8))]),
+        jnp.concatenate([payload, jnp.zeros((324, 5))]))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(padded))
+
+
+# --------------------------------------------------- regression: RANGE_EPS
+def _boundary_block(offsets):
+    """One tuple per offset, numeric value = 0.5 + offset (normalized)."""
+    num = jnp.asarray([[0.5 + d, 0.5] for d in offsets])
+    cat = jnp.zeros((len(offsets), 1), jnp.int32)
+    measures = jnp.ones((len(offsets), 2))
+    return num, cat, measures
+
+
+def test_unified_epsilon_boundary_cases():
+    """Kernel, oracle and fused kernel agree at the predicate boundary:
+    exactly ``lo``, ``lo ± 1e-12`` (inside the shared epsilon) and
+    ``lo ± 1e-7`` (the OLD kernel epsilon — now outside below the range).
+
+    Regression: ``range_mask_agg`` widened ranges by ±1e-7 while the oracle
+    used ±1e-12, so a tuple 5e-8 below the bound was counted by the kernel
+    and not by the oracle. With the shared ``RANGE_EPS`` every path excludes
+    it.
+    """
+    from repro.kernels.range_mask_agg.ops import eval_partials_kernel
+
+    assert RANGE_EPS == 1e-12
+    # lo = 0.5 normalized on dim 0 (schema units 0..10); dim 1 unconstrained.
+    snippets = pad_snippets(make_snippets(
+        SCHEMA, agg=[0], measure=[0],
+        num_ranges=[{0: (0.5 * 10.0, 0.9 * 10.0)}]))
+    offsets = (0.0, 1e-12, -1e-12, 1e-7, -1e-7, -5e-8)
+    in_range = (True, True, True, True, False, False)
+    num, cat, measures = _boundary_block(offsets)
+    oracle = eval_partials(num, cat, measures, snippets)
+    fused = eval_partials_fused(num, cat, measures, snippets)
+    rma = eval_partials_kernel(num, cat, measures, snippets)
+    want = float(sum(in_range))
+    assert float(oracle.count[0]) == want
+    assert float(fused.count[0]) == want
+    # The pre-PR range_mask_agg kernel counted the -5e-8 and -1e-7 tuples
+    # (inside its 1e-7 widening): count was 6.0, not 4.0.
+    assert float(rma.count[0]) == want
+    _assert_partials_bitwise(fused, oracle)
+
+
+# ----------------------------------- regression: eval_partials_kernel valid=
+def test_range_mask_agg_kernel_accepts_valid_and_reports_true_scanned():
+    """Regression: ``eval_partials_kernel`` had no ``valid=`` and reported
+    ``scanned = float(padded_shape)`` — padded blocks deflated every CLT
+    error bound. Now: ``valid=`` accepted, invalid rows contribute nothing,
+    ``scanned`` is the mask sum."""
+    from repro.kernels.range_mask_agg.ops import eval_partials_kernel
+
+    snippets = _snippets()
+    num_p, cat_p, meas_p, valid = pad_tuple_axis(8, *_block(100, seed=41))
+    assert num_p.shape[0] == 128  # really padded
+    parts = eval_partials_kernel(num_p, cat_p, meas_p, snippets, valid)
+    assert float(parts.scanned) == 100.0  # NOT 128.0
+    # Invalid rows contribute nothing: same counts as the unpadded block.
+    plain = eval_partials_kernel(*_block(100, seed=41), snippets)
+    np.testing.assert_allclose(np.asarray(parts.count),
+                               np.asarray(plain.count), rtol=0, atol=0)
+    assert float(plain.scanned) == 100.0
+
+
+# -------------------------------- regression: sharded evaluator telemetry
+def test_sharded_placement_routes_kernel_and_reports_evaluator(
+        forced_devices):
+    """Regression: ``ShardedScanPlacement.eval_block`` ignored
+    ``local_eval`` — ``use_kernels=True`` under a mesh silently fell back
+    to jnp and ``stats()``/``explain`` misreported. Now the kernel request
+    routes through the kernel aggregation and the telemetry names the
+    evaluator actually used."""
+    n_dev = min(4, jax.device_count())
+    mesh = Mesh(np.array(forced_devices(n_dev)), ("data",))
+    num, cat, measures = _block(100, seed=43)
+    snippets = _snippets()
+    rel = Relation(SCHEMA, num, cat, measures, num_normalized=num)
+    place = scan_placement(mesh)
+    oracle = eval_partials(num, cat, measures, snippets)
+
+    _assert_partials_bitwise(place.eval_block(rel, snippets), oracle)
+    assert place.stats()["evaluator"] == "sharded_mask+oracle_agg"
+    assert place.evaluator_for(None) == "sharded_mask+oracle_agg"
+
+    _assert_partials_bitwise(
+        place.eval_block(rel, snippets, local_eval=eval_partials_fused),
+        oracle)
+    assert place.stats()["evaluator"] == "sharded_mask+kernel_agg"
+    assert place.evaluator_for(eval_partials_fused) == \
+        "sharded_mask+kernel_agg"
+
+
+def test_local_placement_reports_evaluator():
+    """Local placement telemetry names the per-block evaluator too."""
+    num, cat, measures = _block(64, seed=47)
+    snippets = _snippets()
+    rel = Relation(SCHEMA, num, cat, measures, num_normalized=num)
+    place = ScanPlacement()
+    assert place.stats()["evaluator"] is None  # nothing ran yet
+    place.eval_block(rel, snippets)
+    assert place.stats()["evaluator"] == "oracle"
+    place.eval_block(rel, snippets, local_eval=eval_partials_fused)
+    assert place.stats()["evaluator"] == "fused_masked_scan"
+    assert place.evaluator_for(eval_partials_fused) == "fused_masked_scan"
+
+
+# ------------------------------------------------------ engine composition
+def test_engine_use_kernels_is_bitwise_and_explains_itself(forced_devices):
+    """End to end: a ``use_kernels=True`` engine answers EXACTLY the same
+    cells locally and over a mesh (the scan partials are bitwise, and the
+    rest of the pipeline sees identical inputs), tracks the oracle engine
+    within the improve path's f32 tolerance (the GP-inference kernel — not
+    this PR's scan plane — is the only divergence left), and
+    ``Session.explain`` reports the evaluator that will run."""
+    from repro.aqp import workload as W
+    from repro.aqp.batch import BatchExecutor
+    from repro.core.engine import EngineConfig, VerdictEngine
+    from repro.verdict.session import Session
+
+    rel = W.make_relation(seed=2, n_rows=2_000, n_num=2, cat_sizes=(4,),
+                          n_measures=1, lengthscale=0.4, noise=0.2)
+    cfg = dict(sample_rate=0.2, n_batches=3, capacity=128, seed=0)
+    eng_oracle = VerdictEngine(rel, EngineConfig(**cfg))
+    eng_kernel = VerdictEngine(rel, EngineConfig(**cfg, use_kernels=True))
+    qs = W.make_workload(3, rel.schema, 5, agg_kinds=("AVG", "COUNT", "SUM"),
+                         cat_pred_prob=0.3)
+    r_oracle = BatchExecutor(eng_oracle).execute_many(qs)
+    r_kernel = BatchExecutor(eng_kernel).execute_many(qs)
+    for a, b in zip(r_oracle, r_kernel):
+        for ca, cb in zip(a.cells, b.cells):
+            assert abs(ca["estimate"] - cb["estimate"]) <= \
+                1e-3 * max(1.0, abs(ca["estimate"]))
+
+    # Kernel path local vs kernel path sharded: EXACT — the fused kernel and
+    # the sharded mask+kernel aggregation are the same canonical fold.
+    n_dev = min(8, jax.device_count())
+    mesh = Mesh(np.array(forced_devices(n_dev)), ("data",))
+    eng_mesh = VerdictEngine(rel, EngineConfig(**cfg, use_kernels=True))
+    r_mesh = BatchExecutor(eng_mesh, mesh=mesh).execute_many(qs)
+    for a, b in zip(r_kernel, r_mesh):
+        assert a.cells == b.cells
+        assert a.batches_used == b.batches_used
+        assert a.tuples_scanned == b.tuples_scanned
+
+    s = Session(rel, EngineConfig(**cfg, use_kernels=True), mesh=mesh)
+    report = s.explain(qs[0])
+    assert report.scan_evaluator == "sharded_mask+kernel_agg"
+    assert "evaluator=sharded_mask+kernel_agg" in str(report)
+    assert s.stats()["scan"]["evaluator"] is None  # nothing scanned yet
+    s_local = Session(rel, EngineConfig(**cfg, use_kernels=True))
+    assert s_local.explain(qs[0]).scan_evaluator == "fused_masked_scan"
+    s_local.execute(qs[0])
+    assert s_local.stats()["scan"]["evaluator"] == "fused_masked_scan"

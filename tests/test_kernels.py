@@ -180,7 +180,11 @@ def test_gp_batch_infer_theorem1():
 
 
 def test_engine_with_kernel_scan_path():
-    """VerdictEngine(use_kernels=True) reproduces the jnp engine's answers."""
+    """VerdictEngine(use_kernels=True) reproduces the jnp engine's answers.
+
+    The scan leg is bitwise (tests/test_fused_scan.py); the residual 1e-3
+    tolerance here is the improve path's f32 gp_batch_infer kernel.
+    """
     from repro.aqp import workload as W
     from repro.core.engine import EngineConfig, VerdictEngine
 
