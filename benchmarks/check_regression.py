@@ -59,6 +59,13 @@ def current_metrics(improve_report: str = "", shard_report: str = "") -> dict:
     import kernels_bench
 
     rows.update(dict(kernels_bench.scan_metrics()))
+    # Fault-injection hooks (repro.ft.faults) live permanently on the serve
+    # hot paths; their disabled cost is one global load + an `is None` test.
+    # Gate that the registry is DISARMED whenever benchmarks run — an armed
+    # plan here would mean the hooks leak into production timings.
+    from repro.ft import faults
+
+    rows["faults/hooks_inactive"] = float(not faults.active())
     return rows
 
 
@@ -103,6 +110,8 @@ def update(rows: dict) -> dict:
         # the once-streamed relation floor (un-fusing the mask collapses
         # this fraction of achievable HBM peak).
         "scan/bytes_per_sec_frac_of_peak": True,
+        # Chaos hooks must be disarmed (zero-cost) during benchmark runs.
+        "faults/hooks_inactive": True,
     }
     return {
         "tolerance": 0.25,

@@ -44,6 +44,7 @@ max(batches_used over queries).
 """
 from __future__ import annotations
 
+import time
 from typing import List, Optional, Sequence
 
 from repro.aqp import queries as Q
@@ -96,7 +97,14 @@ class BatchExecutor:
         target_rel_error: Optional[float] = None,
         max_batches: Optional[int] = None,
         stop_delta: Optional[float] = None,
+        deadline_s: Optional[float] = None,
     ) -> List[QueryResult]:
+        """``deadline_s``: per-query wall-clock budget, measured from each
+        query's replay start (the shared scan amortizes across queries, so
+        a query replaying over already-evaluated batches is nearly free; the
+        deadline bounds the batches IT forces to be scanned). On expiry the
+        best-so-far answer returns, ``degraded`` with a ``"deadline"``
+        reason — every query resolves."""
         eng = self.engine
         max_batches = min(
             max_batches or eng.batches.n_batches, eng.batches.n_batches
@@ -109,9 +117,11 @@ class BatchExecutor:
                                 stats=wp.stats)
         results: List[Optional[QueryResult]] = [None] * len(queries)
         for lp in wp.logical:
+            deadline = (None if deadline_s is None
+                        else time.monotonic() + float(deadline_s))
             results[lp.index] = replay_query(
                 eng, lp, phys_main if lp.supported else phys_raw,
                 target_rel_error=target_rel_error, max_batches=max_batches,
-                stop_delta=stop_delta,
+                stop_delta=stop_delta, deadline=deadline,
             )
         return results

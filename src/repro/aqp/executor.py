@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import AVG, FREQ, RawAnswer, SnippetBatch
+from repro.ft import faults
 from repro.kernels import RANGE_EPS, SCAN_TILE_Q, SCAN_TILE_T
 
 BIG_BETA2 = 1e12  # raw error for snippets with no support in the scanned sample
@@ -383,6 +384,7 @@ class ScanPlacement:
     def eval_block(self, block, snippets: SnippetBatch,
                    local_eval=None) -> Partials:
         """Partials for one tuple block through this placement."""
+        faults.fire("scan.eval")  # seam: before dispatch, state untouched
         self.blocks_evaluated += 1
         self.tuples_placed += int(block.num_normalized.shape[0])
         self.last_evaluator = self.evaluator_for(local_eval)
@@ -445,6 +447,7 @@ class ShardedScanPlacement(ScanPlacement):
 
     def eval_block(self, block, snippets: SnippetBatch,
                    local_eval=None) -> Partials:
+        faults.fire("scan.eval")  # same seam as the local placement
         t = int(block.num_normalized.shape[0])
         self.blocks_evaluated += 1
         self.tuples_placed += t

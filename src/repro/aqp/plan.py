@@ -34,6 +34,7 @@ of one" (``execute(q) == execute_many([q])[0]``).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -60,6 +61,14 @@ class QueryResult:
     ``truncated_groups``: group-by cells silently dropped by the ``n_max``
     cap in ``Q.decompose`` — surfaced so callers (and ``Session.explain``)
     can see that the result is a prefix of the full group set.
+
+    ``degraded``/``degraded_reasons``: honest-but-weaker-than-possible
+    serving. A quarantined synopsis leaves its groups on the raw sample
+    estimate (the paper's Theorem-1 floor) with
+    ``{state_key: quarantine reason}`` entries; a deadline expiry returns
+    the best-so-far answer with a ``"deadline"`` entry. Either way the
+    (estimate, CI) pair is valid — degraded flags the missed improvement,
+    not a wrong answer.
     """
 
     cells: List[dict]
@@ -70,6 +79,8 @@ class QueryResult:
     snippet_answer: Optional[ImprovedAnswer] = None
     plan: Optional[Q.SnippetPlan] = None
     truncated_groups: int = 0
+    degraded: bool = False
+    degraded_reasons: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def max_rel_error(self, delta: float = 0.95) -> float:
         alpha = float(confidence_multiplier(delta))
@@ -293,6 +304,7 @@ def replay_rounds(
     max_batches: Optional[int] = None,
     stop_delta: Optional[float] = None,
     every_batch: bool = False,
+    deadline: Optional[float] = None,
 ):
     """The single query lifecycle, one round per evaluated sample batch.
 
@@ -308,6 +320,18 @@ def replay_rounds(
     intermediate improvements are side-effect-free); ``every_batch=True``
     evaluates and yields after every sample batch. Raw-only (unsupported)
     queries never early-stop and never record (paper §2.2).
+
+    ``deadline``: absolute ``time.monotonic()`` budget (BlinkDB's "bounded
+    response time" half of the contract). Checked AFTER each round: on
+    expiry the round just computed becomes final — the best-so-far answer
+    with its honest (wider) CI returns instead of blocking, flagged
+    ``degraded`` with a ``"deadline"`` reason. At least one round always
+    runs, so every query resolves to a valid estimate.
+
+    Degradation never invalidates an answer: quarantined synopses leave
+    their rows on the raw sample estimate (``improve_groups`` health
+    telemetry → ``degraded_reasons``), which Theorem 1 guarantees is an
+    honest unbiased fallback.
     """
     cfg = engine.config
     max_batches = min(
@@ -318,27 +342,42 @@ def replay_rounds(
         yield QueryResult([], 0, 0, True, plan=None), True
         return
     card = engine.batches.source_cardinality
-    all_rounds = every_batch or target_rel_error is not None
+    all_rounds = (every_batch or target_rel_error is not None
+                  or deadline is not None)
     if not lp.supported:
         # Raw AQP answers over the full budget, no learning (paper §2.2).
-        rounds = range(max_batches) if every_batch else (max_batches - 1,)
+        rounds = (range(max_batches)
+                  if every_batch or deadline is not None
+                  else (max_batches - 1,))
         for b in rounds:
             raw = physical.raw_at(b, lp.rows)
             cells = Q.assemble_results(lp.plan, raw.theta, raw.beta2, card)
             used = b + 1
-            yield QueryResult(
+            res = QueryResult(
                 cells, used, engine._tuples(used), False, lp.reason,
                 plan=lp.plan, truncated_groups=lp.truncated_groups,
-            ), b == max_batches - 1
+            )
+            expired = deadline is not None and time.monotonic() >= deadline
+            final = expired or b == max_batches - 1
+            if expired and b < max_batches - 1:
+                res.degraded = True
+                res.degraded_reasons["deadline"] = (
+                    f"deadline expired after {used} of {max_batches} batches"
+                )
+            yield res, final
+            if final:
+                return
         return
     n = lp.plan.snippets.n
     rounds = range(max_batches) if all_rounds else (max_batches - 1,)
     for b in rounds:
         raw = physical.raw_at(b, lp.rows)
         used = b + 1
+        health: Dict[str, str] = {}
         if cfg.learning:
             improved = engine.store.improve_groups(
-                lp.plan.snippets, raw, use_kernels=cfg.use_kernels)
+                lp.plan.snippets, raw, use_kernels=cfg.use_kernels,
+                health=health)
         else:
             improved = ImprovedAnswer(
                 raw.theta, raw.beta2, raw.theta, raw.beta2,
@@ -350,10 +389,17 @@ def replay_rounds(
             cells, used, engine._tuples(used), True,
             snippet_answer=improved, plan=lp.plan,
             truncated_groups=lp.truncated_groups,
+            degraded=bool(health), degraded_reasons=health,
         )
         met = (target_rel_error is not None
                and res.max_rel_error(stop_delta) <= target_rel_error)
-        final = met or b == max_batches - 1
+        expired = deadline is not None and time.monotonic() >= deadline
+        final = met or expired or b == max_batches - 1
+        if expired and not met and b < max_batches - 1:
+            res.degraded = True
+            res.degraded_reasons["deadline"] = (
+                f"deadline expired after {used} of {max_batches} batches"
+            )
         if final and cfg.learning:
             engine.store.record(lp.plan.snippets, raw)
         yield res, final
@@ -368,12 +414,13 @@ def replay_query(
     target_rel_error: Optional[float] = None,
     max_batches: Optional[int] = None,
     stop_delta: Optional[float] = None,
+    deadline: Optional[float] = None,
 ) -> QueryResult:
     """One-shot lifecycle: the final round of ``replay_rounds``."""
     result = None
     for result, _ in replay_rounds(
         engine, lp, physical, target_rel_error=target_rel_error,
-        max_batches=max_batches, stop_delta=stop_delta,
+        max_batches=max_batches, stop_delta=stop_delta, deadline=deadline,
     ):
         pass
     return result

@@ -150,6 +150,30 @@ class VerdictEngine:
         ``"agg<k>-measure<m>"`` keys; see ``repro.core.store.state_key``)."""
         return self.store.ingest_stats()
 
+    def heal(self, manager=None, step: Optional[int] = None) -> Dict[str, bool]:
+        """Heal every quarantined synopsis and rejoin it to serving.
+
+        With a ``CheckpointManager``, quarantined keys restore from the
+        last good committed checkpoint (``restore_blind``) and replay their
+        parked batches on top; without one (or for keys absent from the
+        checkpoint) they rebuild from their own row arrays. Returns
+        ``{state_key: healed}`` for the keys that were quarantined.
+        """
+        states = None
+        if manager is not None:
+            try:
+                states, _ = manager.restore_blind(step)
+            except Exception as e:  # noqa: BLE001 — degrade to rebuild
+                # No committed checkpoint (or none intact): heal from the
+                # synopses' own row arrays instead of failing the heal.
+                warnings.warn(
+                    f"heal(): checkpoint restore unavailable ({e!r}); "
+                    "rebuilding quarantined synopses from row arrays",
+                    RuntimeWarning, stacklevel=2,
+                )
+                states = None
+        return self.store.heal(states)
+
     # ------------------------------------------------------------ improve
     _group_rows = staticmethod(group_rows)  # back-compat alias
 
@@ -298,6 +322,7 @@ class VerdictEngine:
         max_batches: Optional[int] = None,
         mesh=None,
         stop_delta: Optional[float] = None,
+        deadline_s: Optional[float] = None,
     ) -> List[QueryResult]:
         """Execute a workload through the fused ``BatchExecutor`` path.
 
@@ -305,11 +330,14 @@ class VerdictEngine:
         (identical snippets deduped across queries); answers match ``execute``
         run query-by-query bit for bit. ``stop_delta`` overrides the
         confidence level of the early-stop check (default
-        ``config.report_delta``). See ``repro.aqp.batch``.
+        ``config.report_delta``); ``deadline_s`` bounds each query's wall
+        clock — on expiry the best-so-far answer returns with its honest
+        (wider) CI, flagged ``degraded``. See ``repro.aqp.batch``.
         """
         from repro.aqp.batch import BatchExecutor
 
         return BatchExecutor(self, mesh=mesh).execute_many(
             queries, target_rel_error=target_rel_error,
             max_batches=max_batches, stop_delta=stop_delta,
+            deadline_s=deadline_s,
         )

@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import re
 import threading
+import warnings
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
@@ -194,6 +195,7 @@ class SynopsisStore:
                 min_q_bucket=cfg.min_q_bucket,
                 device=self.device_for(key),
             )
+            syn.name = state_key(key)  # fault-injection / telemetry identity
             self._synopses[key] = syn
         return syn
 
@@ -209,7 +211,8 @@ class SynopsisStore:
         return [list(groups)] if groups else []
 
     def improve_groups(self, snippets: SnippetBatch, raw: RawAnswer,
-                       use_kernels: bool = False) -> ImprovedAnswer:
+                       use_kernels: bool = False,
+                       health: Optional[dict] = None) -> ImprovedAnswer:
         """Per-aggregate-key improvement, scattered back to query order.
 
         Within each dispatch set the per-key Python loop is fused into ONE
@@ -220,6 +223,13 @@ class SynopsisStore:
         placements answer-equivalent. With ``use_kernels=True`` each group
         instead routes through the ``gp_batch_infer`` Pallas kernel, whose
         128-wide MXU tiling is the TPU-side equivalent of the stacking.
+
+        Degraded mode: a QUARANTINED synopsis is skipped exactly like an
+        empty one — its rows keep the raw sample estimate (the paper's
+        Theorem-1 floor, still an honest unbiased answer) — and, when the
+        caller passes a ``health`` dict, gains an entry
+        ``{state_key: quarantine reason}`` so the query result can surface
+        ``degraded=True`` telemetry.
         """
         theta = np.asarray(raw.theta)
         beta2 = np.asarray(raw.beta2)
@@ -230,6 +240,10 @@ class SynopsisStore:
         for key, rows in group_rows(snippets):
             syn = self.for_key(key)
             syn.drain()
+            if syn.quarantined:
+                if health is not None:
+                    health[state_key(key)] = syn.quarantine_reason
+                continue  # degrade: raw floor for this group's rows
             if syn.n == 0:
                 continue  # Theorem 1 equality case: raw passes through
             groups.append((key, syn, rows))
@@ -315,6 +329,37 @@ class SynopsisStore:
             for key in sorted(self._synopses)
         }
 
+    # --------------------------------------------------------------- health
+    def quarantined(self) -> Dict[str, str]:
+        """``{state_key: reason}`` for every quarantined synopsis ({} when
+        healthy) — the store-level view behind ``Session.stats()["health"]``."""
+        return {
+            state_key(key): syn.quarantine_reason
+            for key, syn in sorted(self._synopses.items())
+            if syn.quarantined
+        }
+
+    def heal(self, states: Optional[Dict[str, dict]] = None) -> Dict[str, bool]:
+        """Heal every quarantined synopsis; returns ``{state_key: healed}``.
+
+        ``states``: an optional store-level ``state_dict`` payload (e.g.
+        ``CheckpointManager.restore_blind``) — keys present there heal from
+        the last-good snapshot then replay parked batches; keys absent heal
+        via a fresh ``rebuild()`` from their own row arrays. Healthy
+        synopses are untouched (not in the returned dict).
+        """
+        out: Dict[str, bool] = {}
+        for key, syn in sorted(self._synopses.items()):
+            if not syn.quarantined:
+                continue
+            name = state_key(key)
+            state = states.get(name) if states is not None else None
+            if state is not None:
+                state = dict(state)
+                state.pop("shard", None)
+            out[name] = syn.heal(state)
+        return out
+
     def stats(self) -> dict:
         """Operator-facing snapshot: placement, occupancy, back-pressure."""
         keys = {}
@@ -328,7 +373,7 @@ class SynopsisStore:
                 "ingest": syn.ingest_stats(),
             }
         return {"kind": self.kind, "n_shards": 1, "n_keys": len(keys),
-                "keys": keys}
+                "keys": keys, "quarantined": self.quarantined()}
 
     # ------------------------------------------------------------- persist
     def state_dict(self) -> Dict[str, dict]:
@@ -340,10 +385,22 @@ class SynopsisStore:
         only: ``load_state_dict`` re-places by policy, so a checkpoint
         written under one placement restores onto any other (including a
         different mesh shape).
+
+        Quarantined synopses are SKIPPED (with a warning): a half-applied
+        model never persists, and one sick key must not block checkpointing
+        the healthy rest — after ``heal()`` the key rejoins the next save.
         """
         out = {}
         for key in sorted(self._synopses):
-            sd = self._synopses[key].state_dict()
+            syn = self._synopses[key]
+            if syn.quarantined:
+                warnings.warn(
+                    f"skipping quarantined synopsis {state_key(key)} in "
+                    f"state_dict (heal() to rejoin): {syn.quarantine_reason}",
+                    RuntimeWarning, stacklevel=2,
+                )
+                continue
+            sd = syn.state_dict()
             sd["shard"] = np.asarray(self.shard_index(key), np.int64)
             out[state_key(key)] = sd
         return out
@@ -419,8 +476,10 @@ class ShardedSynopsisStore(SynopsisStore):
     def drain(self):
         """Parallel barrier: one waiter thread per occupied shard drains
         that shard's synopses (total wall clock = the slowest shard, not
-        the sum over shards). A poisoned queue still re-raises — the first
-        failure in shard-index order wins."""
+        the sum over shards). Never raises: an ingest failure quarantines
+        the ONE affected synopsis (shard-level blast radius at most), which
+        degrades to raw serving until ``heal()`` — it no longer poisons the
+        whole store's barrier."""
         by_shard: Dict[int, List[Synopsis]] = {}
         for key, syn in self._synopses.items():
             by_shard.setdefault(self.shard_index(key), []).append(syn)
@@ -430,14 +489,10 @@ class ShardedSynopsisStore(SynopsisStore):
                     syn.drain()
             return
         shards = sorted(by_shard)
-        errors: Dict[int, BaseException] = {}
 
         def wait(shard):
             for syn in by_shard[shard]:
-                try:
-                    syn.drain()
-                except BaseException as e:  # noqa: BLE001 — re-raised below
-                    errors.setdefault(shard, e)
+                syn.drain()  # quarantines on failure; never raises
 
         threads = [threading.Thread(target=wait, args=(s,), daemon=True)
                    for s in shards]
@@ -445,9 +500,6 @@ class ShardedSynopsisStore(SynopsisStore):
             t.start()
         for t in threads:
             t.join()
-        for shard in shards:
-            if shard in errors:
-                raise errors[shard]
 
     def stats(self) -> dict:
         out = super().stats()

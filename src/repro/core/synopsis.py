@@ -23,6 +23,18 @@ path. ``drain()`` is the explicit barrier; every reader of model state
 (``improve``, ``state_dict``, ``refit``…) drains first, so the post-drain
 state is bitwise identical to synchronous ingestion regardless of thread
 timing — async ingest is deterministic by construction.
+
+Failure never blocks serving either: a failed apply **quarantines** this
+synopsis — the failed batch and everything after it are parked unapplied
+(FIFO), ``drain()`` stays a plain barrier (it NEVER raises), ``improve``
+returns the raw sample estimate (the paper's Theorem-1 floor — degraded but
+honest), and ``state_dict`` refuses with a typed
+``SynopsisQuarantinedError`` so a half-applied model never checkpoints.
+``heal()`` restores a consistent model (from a last-good checkpoint state,
+or a fresh ``rebuild()`` from the row arrays), replays the parked batches in
+order, and rejoins serving — for failures injected at the apply seam
+(``repro.ft.faults``) the healed state is bitwise-identical to a
+never-failed store.
 """
 from __future__ import annotations
 
@@ -37,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import covariance, inference, learning, validation
+from repro.ft import faults
 from repro.core.types import (
     FREQ,
     GPParams,
@@ -173,6 +186,20 @@ def _drain_live_queues():
 MAX_PENDING_DEFAULT = 64  # ingest back-pressure bound (pending batches)
 
 
+class SynopsisQuarantinedError(RuntimeError):
+    """Raised by ``state_dict`` on a quarantined synopsis: a model built on a
+    half-applied batch must never checkpoint. Serving paths never raise this —
+    they degrade to the raw sample estimate instead (Theorem 1's floor)."""
+
+    def __init__(self, name: Optional[str], cause: BaseException):
+        super().__init__(
+            f"synopsis {name or '<unnamed>'} is quarantined "
+            f"(heal() to rejoin): {cause!r}"
+        )
+        self.name = name
+        self.cause = cause
+
+
 class _IngestQueue:
     """Background applier for ``Synopsis.add`` batches.
 
@@ -190,10 +217,12 @@ class _IngestQueue:
     backlog observed, so operators can see how close serving runs to the
     bound.
 
-    A failed apply POISONS the queue: the partial mutation cannot be rolled
-    back, so later batches are discarded unapplied and every subsequent
-    ``drain()`` re-raises — the synopsis never silently serves (or
-    checkpoints) a model built on a half-applied batch.
+    Failure handling lives in the apply fn, not here: the queue's applier is
+    ``Synopsis._guarded_apply``, which never raises — a failed apply
+    quarantines the owning synopsis and parks the failed batch (and every
+    later one) for ``heal()`` replay. ``drain()`` is therefore ALWAYS a
+    plain barrier: it waits for the backlog and never re-raises, so one bad
+    batch can no longer poison every subsequent barrier globally.
     """
 
     IDLE_TIMEOUT = 5.0
@@ -206,7 +235,6 @@ class _IngestQueue:
         self._cv = threading.Condition()
         self._outstanding = 0
         self._thread: Optional[threading.Thread] = None
-        self._exc: Optional[BaseException] = None
         _LIVE_QUEUES.add(self)
 
     def try_submit(self, item) -> bool:
@@ -236,26 +264,21 @@ class _IngestQueue:
                 batch = list(self._pending)
                 self._pending.clear()
             for item in batch:
-                with self._cv:
-                    poisoned = self._exc is not None
-                if not poisoned:
-                    try:
-                        self._apply(*item)
-                    except BaseException as e:  # noqa: BLE001 — poisons queue
-                        with self._cv:
-                            if self._exc is None:
-                                self._exc = e
+                try:
+                    self._apply(*item)
+                except BaseException:  # noqa: BLE001 — guarded appliers
+                    pass  # never raise out of the worker; the guarded apply
+                    # already quarantined the synopsis
                 with self._cv:
                     self._outstanding -= 1
                     self._cv.notify_all()
 
     def drain(self):
+        """Barrier only: wait until the backlog is fully handed to the
+        applier. Never raises (see class docstring)."""
         with self._cv:
             while self._outstanding:
                 self._cv.wait()
-            exc = self._exc  # kept: a poisoned queue re-raises on every drain
-        if exc is not None:
-            raise RuntimeError("async synopsis ingest failed") from exc
 
 
 class Synopsis:
@@ -288,8 +311,13 @@ class Synopsis:
         self.device = device
         self.min_fill_bucket = int(min_fill_bucket)
         self.min_q_bucket = int(min_q_bucket)
+        self.name: Optional[str] = None  # store-assigned state_key (fault key)
         self._shed_count = 0
         self._restored_high_water = 0
+        self._qlock = threading.Lock()
+        self._quarantine_exc: Optional[BaseException] = None
+        self._unapplied: list = []  # parked (FIFO) batches awaiting heal()
+        self._quarantine_count = 0  # quarantine episodes over this lifetime
         l, c, v = schema.n_num, schema.n_cat, max(schema.cat_vmax, 1)
         C = self.capacity
         self._lo = np.zeros((C, l))
@@ -378,19 +406,108 @@ class Synopsis:
             np.array(np.asarray(beta2), dtype=np.float64),
         )
         if not self.async_ingest:
-            self._apply_add(*item)
+            self._guarded_apply(*item)
             return
         if self._ingest is None:
-            self._ingest = _IngestQueue(self._apply_add,
+            self._ingest = _IngestQueue(self._guarded_apply,
                                         max_pending=self.max_pending)
         if not self._ingest.try_submit(item):
             self._shed_count += 1
             self._ingest.drain()  # preserve FIFO before applying inline
+            self._guarded_apply(*item)
+
+    def _guarded_apply(self, *item):
+        """Apply one batch, quarantining on failure instead of raising.
+
+        This is the ONLY applier the ingest queue (and the sync/shed paths)
+        run, so a failed covariance build / inverse update can never
+        propagate out of ``add``/``drain``: the synopsis quarantines, the
+        failed batch and everything after it park in FIFO order for
+        ``heal()`` replay, and serving continues on the raw-answer floor.
+        """
+        with self._qlock:
+            if self._quarantine_exc is not None:
+                self._unapplied.append(item)
+                return
+        try:
             self._apply_add(*item)
+        except BaseException as e:  # noqa: BLE001 — quarantine, never raise
+            self._mark_quarantined(e, item)
+
+    def _mark_quarantined(self, exc: BaseException, item=None):
+        with self._qlock:
+            if self._quarantine_exc is None:
+                self._quarantine_exc = exc
+                self._quarantine_count += 1
+            if item is not None:
+                self._unapplied.append(item)
+
+    @property
+    def quarantined(self) -> bool:
+        """Whether this synopsis is serving degraded (raw answers only)."""
+        return self._quarantine_exc is not None
+
+    @property
+    def quarantine_reason(self) -> Optional[str]:
+        exc = self._quarantine_exc
+        return None if exc is None else repr(exc)
+
+    def heal(self, state: Optional[dict] = None) -> bool:
+        """Rebuild a consistent model and rejoin serving.
+
+        ``state``: a last-good ``state_dict`` snapshot (e.g. from
+        ``CheckpointManager.restore_blind``) to restore from; ``None``
+        rebuilds Sigma / Sigma^{-1} / alpha from this synopsis' own row
+        arrays (``rebuild()``), which is exact when the failure struck at
+        the apply seam *before* any mutation (all ``repro.ft.faults``
+        injections do). Parked batches then replay in their original FIFO
+        order, so a healed synopsis is bitwise-identical to one that never
+        failed. Returns True iff the synopsis is healthy afterwards; a
+        replay failure re-quarantines (remaining batches stay parked) and
+        returns False. Call from a quiesced serving thread — concurrent
+        ``add`` during heal can reorder replay.
+        """
+        if not self.quarantined:
+            return True
+        if self._ingest is not None:
+            # Flush in-flight adds into the parked list while the flag is
+            # still set (the guarded applier parks rather than applies).
+            self._ingest.drain()
+        with self._qlock:
+            parked = list(self._unapplied)
+            self._unapplied.clear()
+            self._quarantine_exc = None
+        try:
+            if state is not None:
+                self.load_state_dict(state)
+            else:
+                self.rebuild()
+        except BaseException as e:  # noqa: BLE001 — re-quarantine
+            with self._qlock:
+                self._quarantine_exc = e
+                self._quarantine_count += 1
+                self._unapplied = parked + self._unapplied
+            return False
+        for i, item in enumerate(parked):
+            try:
+                self._apply_add(*item)
+            except BaseException as e:  # noqa: BLE001 — re-quarantine
+                with self._qlock:
+                    self._quarantine_exc = e
+                    self._quarantine_count += 1
+                    self._unapplied = parked[i:] + self._unapplied
+                return False
+        return True
 
     def drain(self):
-        """Barrier: block until every enqueued ``add`` batch has been applied
-        (and re-raise any ingest failure). Idempotent and cheap when idle."""
+        """Barrier: block until every enqueued ``add`` batch has been handed
+        to the (never-raising) guarded applier. NEVER raises — an ingest
+        failure quarantines this synopsis instead of poisoning the barrier.
+        Idempotent and cheap when idle."""
+        try:
+            faults.fire("store.drain", key=self.name)
+        except BaseException as e:  # noqa: BLE001 — injected barrier fault
+            self._mark_quarantined(e)  # still quiesce the worker below
         if self._ingest is not None:
             self._ingest.drain()
 
@@ -401,12 +518,20 @@ class Synopsis:
         return max(live, self._restored_high_water)
 
     def ingest_stats(self) -> dict:
-        """Back-pressure telemetry for the async ingest queue."""
-        return {
-            "max_pending": self.max_pending,
-            "high_water": self.ingest_high_water,
-            "shed_count": self._shed_count,
-        }
+        """Back-pressure + quarantine telemetry for the ingest path."""
+        with self._qlock:
+            return {
+                "max_pending": self.max_pending,
+                "high_water": self.ingest_high_water,
+                "shed_count": self._shed_count,
+                "quarantined": self._quarantine_exc is not None,
+                "quarantine_reason": (
+                    None if self._quarantine_exc is None
+                    else repr(self._quarantine_exc)
+                ),
+                "unapplied": len(self._unapplied),
+                "quarantine_count": self._quarantine_count,
+            }
 
     def _apply_add(self, lo, hi, cat, agg, mea, theta, beta2):
         """Synchronous ingest of one host-side batch (runs on the worker).
@@ -419,6 +544,7 @@ class Synopsis:
         are chosen after the whole incoming batch has refreshed its duplicate
         stamps.
         """
+        faults.fire("ingest.apply", key=self.name)  # seam: before any mutation
         pending: dict = {}  # key -> [incoming index of best beta2, LRU stamp]
         for i in range(lo.shape[0]):
             if not (np.isfinite(theta[i]) and np.isfinite(beta2[i])):
@@ -565,9 +691,13 @@ class Synopsis:
 
     # ------------------------------------------------------------------ refit
     def refit(self, steps: int = 150, lr: float = 0.1, learn_sigma: bool = False):
-        """Offline learning (Appendix A): relearn params, rebuild the model."""
+        """Offline learning (Appendix A): relearn params, rebuild the model.
+
+        A quarantined synopsis skips refit (no-op): the row arrays may hold a
+        half-applied batch, so learning waits for ``heal()``.
+        """
         self.drain()
-        if self.n < 3:
+        if self.quarantined or self.n < 3:
             return self.params
         rows = np.asarray(self._order, dtype=np.int64)
         batch = self._row_batch(rows)
@@ -637,8 +767,10 @@ class Synopsis:
         jnp f64 program; validation (Appendix B) applies either way.
         """
         self.drain()
-        if self.n == 0:
-            # Empty synopsis: Theorem 1's equality case — return raw unchanged.
+        if self.n == 0 or self.quarantined:
+            # Empty synopsis (Theorem 1's equality case) or quarantined
+            # (degraded mode): return raw unchanged — always a valid,
+            # honest answer.
             acc = jnp.zeros((new.n,), bool)
             return ImprovedAnswer(raw.theta, raw.beta2, raw.theta, raw.beta2, acc)
         q = new.n
@@ -696,8 +828,13 @@ class Synopsis:
         Every array is a copy — never a live view into the ring buffers — so
         snapshots stay valid across later ``add`` calls (checkpointing relies
         on this).
+
+        Raises ``SynopsisQuarantinedError`` while quarantined: a model with
+        half-applied batches must never persist (``heal()`` first).
         """
         self.drain()
+        if self.quarantined:
+            raise SynopsisQuarantinedError(self.name, self._quarantine_exc)
         n = self.n
         return {
             "lo": np.array(self._lo[:n]),

@@ -1,1 +1,11 @@
+"""Fault tolerance: checkpointing + deterministic fault injection.
+
+``CheckpointManager`` persists the learned synopses (atomic commits,
+per-shard checksums, fallback to the newest intact step); ``faults`` is the
+seeded fault-injection registry whose named points the degraded-mode
+serving path is tested against (see ``repro.ft.faults``).
+"""
+from repro.ft import faults
 from repro.ft.checkpoint import CheckpointManager
+
+__all__ = ["CheckpointManager", "faults"]

@@ -7,8 +7,19 @@ Layout:  <dir>/step_<n>/
 
 - Writes go to ``step_<n>.tmp`` then a single ``os.rename`` commits — a
   killed writer never leaves a half-readable checkpoint.
+- Integrity: the manifest records a CRC32 per shard file; reads verify it
+  and a corrupt (or unreadable) step FALLS BACK to the newest intact
+  earlier committed step with a warning instead of crashing — restore
+  degrades to older knowledge, never to no knowledge. (Checkpoints written
+  before checksums existed load unverified.)
 - ``save_async`` snapshots to host memory synchronously (jax.device_get) and
-  does the file I/O on a daemon thread, overlapping with the next step.
+  does the file I/O on a daemon thread, overlapping with the next step. A
+  failed async write is NOT dropped on the daemon thread: it re-raises on
+  the next ``wait()``/``save``/``save_async``.
+- Fault-injection seams (``repro.ft.faults``): ``checkpoint.write`` fires
+  before the shard write (a torn write: tmp dir, no COMMITTED marker —
+  invisible to readers), ``checkpoint.read`` per step read (exercises the
+  fallback walk).
 - Restore validates the manifest against the target pytree structure and
   ``device_put``s with the *target's* shardings, so restoring onto a
   different mesh (elastic re-scale) is the same code path (see
@@ -23,16 +34,25 @@ Layout:  <dir>/step_<n>/
 """
 from __future__ import annotations
 
+import io
 import json
 import os
 import shutil
 import threading
+import warnings
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
+from repro.ft import faults
+
 _SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A committed step failed checksum/readback verification."""
 
 
 def _flatten(tree):
@@ -50,6 +70,7 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._async_exc: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):
@@ -60,14 +81,29 @@ class CheckpointManager:
     def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
-        self._thread = threading.Thread(
-            target=self._write, args=(step, host_tree, extra or {}), daemon=True)
+
+        def run():
+            try:
+                self._write(step, host_tree, extra or {})
+            except BaseException as e:  # noqa: BLE001 — surfaced on wait()
+                self._async_exc = e
+
+        self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
 
     def wait(self):
+        """Join any in-flight async save; re-raise its failure here.
+
+        A failed background write must never vanish on the daemon thread —
+        the NEXT synchronization point (``wait``/``save``/``save_async``)
+        raises it, so callers learn a step is missing before relying on it.
+        """
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        exc, self._async_exc = self._async_exc, None
+        if exc is not None:
+            raise RuntimeError("async checkpoint save failed") from exc
 
     def _write(self, step: int, host_tree, extra: dict):
         flat, _ = _flatten(host_tree)
@@ -75,14 +111,21 @@ class CheckpointManager:
         final = os.path.join(self.dir, f"step_{step:010d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
-        np.savez(os.path.join(tmp, f"shard_{proc}.npz"),
+        # Injected torn write: tmp dir exists, no COMMITTED marker, never
+        # renamed — invisible to all_steps()/readers by construction.
+        faults.fire("checkpoint.write", key=f"step_{step}")
+        shard_name = f"shard_{proc}.npz"
+        np.savez(os.path.join(tmp, shard_name),
                  **{k: v for k, v in flat.items()})
+        with open(os.path.join(tmp, shard_name), "rb") as f:
+            crc = zlib.crc32(f.read())
         manifest = {
             "step": step,
             "keys": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                      for k, v in flat.items()},
             "extra": extra,
             "n_processes": jax.process_count(),
+            "checksums": {shard_name: crc},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
@@ -112,18 +155,56 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def _read_step(self, step: Optional[int]):
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+    def _load_step(self, step: int):
+        """Load ONE committed step, verifying per-shard checksums."""
+        faults.fire("checkpoint.read", key=f"step_{step}")
         path = os.path.join(self.dir, f"step_{step:010d}")
-        manifest = json.load(open(os.path.join(path, "manifest.json")))
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        # Absent in checkpoints written before integrity checking: load
+        # unverified rather than refuse old knowledge.
+        checksums = manifest.get("checksums", {})
         data = {}
         for p in range(manifest["n_processes"]):
-            with np.load(os.path.join(path, f"shard_{p}.npz")) as z:
+            shard_name = f"shard_{p}.npz"
+            with open(os.path.join(path, shard_name), "rb") as f:
+                raw = f.read()
+            want = checksums.get(shard_name)
+            if want is not None and zlib.crc32(raw) != int(want):
+                raise CheckpointCorruptError(
+                    f"checksum mismatch in {path}/{shard_name}")
+            with np.load(io.BytesIO(raw)) as z:
                 for k in z.files:
                     data[k] = z[k]
         return data, manifest
+
+    def _read_step(self, step: Optional[int]):
+        """Newest intact committed step ≤ ``step`` (or newest overall).
+
+        A corrupt/unreadable step WARNS and falls back to the next-newest
+        committed step — restore degrades to older knowledge rather than
+        crashing (the synopsis is an accelerator, not the source of truth).
+        Raises only when no intact step remains.
+        """
+        steps = self.all_steps()
+        candidates = [s for s in reversed(steps)
+                      if step is None or s <= step]
+        if not candidates:
+            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
+        last_exc: Optional[BaseException] = None
+        for s in candidates:
+            try:
+                return self._load_step(s)
+            except Exception as e:  # noqa: BLE001 — walk back, warn
+                last_exc = e
+                warnings.warn(
+                    f"checkpoint step {s} unreadable ({e!r}); falling back "
+                    f"to an earlier committed step",
+                    RuntimeWarning, stacklevel=2,
+                )
+        raise CheckpointCorruptError(
+            f"no intact committed checkpoint in {self.dir} "
+            f"(last error: {last_exc!r})")
 
     def restore_blind(self, step: Optional[int] = None):
         """Restore without a target pytree: nested dicts straight from the

@@ -7,14 +7,27 @@ requests and executes them through ``BatchExecutor`` under the service-wide
 flush instead of once per request. Tickets resolve to ``QueryResult``s after
 the flush — the classic serving microbatch pattern (cf. decode-step batching
 in ``repro.serving.engine``) applied to query answering.
+
+Fault isolation (the serving half of the degraded-mode contract): one poison
+query can no longer strand its microbatch. ``flush`` retries a failed fused
+execution with bounded exponential backoff (transient faults — e.g. a
+``max_fires``-limited injected fault — clear on retry), then BISECTS the
+batch to isolate the poison query, which resolves as a typed
+``FailedAnswer`` on its own ticket while every other ticket still gets its
+real answer. A ``finally`` backstop guarantees no ticket ever hangs, even if
+the isolation machinery itself dies. Per-query wall-clock ``deadline_s``
+(threaded from ``ErrorBudget.deadline_s``) bounds response time: on expiry
+the best-so-far answer returns with its honest wider CI.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 from repro.aqp.batch import BatchExecutor, BatchStats
 from repro.aqp.queries import AggQuery
+from repro.verdict.answer import FailedAnswer
 
 
 @dataclasses.dataclass
@@ -49,13 +62,26 @@ class AqpService:
                  target_rel_error: Optional[float] = None, mesh=None,
                  max_batches: Optional[int] = None,
                  stop_delta: Optional[float] = None,
-                 result_wrapper=None):
+                 result_wrapper=None,
+                 deadline_s: Optional[float] = None,
+                 max_retries: int = 2,
+                 backoff_base_s: float = 0.01,
+                 backoff_max_s: float = 0.5):
         # Accept either a raw VerdictEngine or a repro.verdict Session.
         self.engine = getattr(engine, "engine", engine)
         self.max_batch = int(max_batch)
         self.target_rel_error = target_rel_error
         self.max_batches = max_batches
         self.stop_delta = stop_delta
+        # Per-query wall-clock deadline (ErrorBudget.deadline_s): expiry
+        # returns the best-so-far answer, degraded + honest, never blocks.
+        self.deadline_s = deadline_s
+        # Single-query retry budget + bounded exponential backoff between
+        # attempts (bisection isolates first; retries then absorb
+        # transient faults at single-query granularity).
+        self.max_retries = int(max_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.backoff_max_s = float(backoff_max_s)
         # Applied to every QueryResult before it lands on a ticket —
         # Session.serve passes QueryAnswer.from_result so facade users get
         # the same typed answers session.execute returns.
@@ -84,25 +110,85 @@ class AqpService:
             self.flush()
         return ticket
 
-    def flush(self) -> List:
-        """Execute all pending queries in one fused scan."""
-        if not self._queue:
-            return []
-        batch, self._queue = self._queue, []
-        results = self.executor.execute_many(
-            [q for q, _ in batch],
+    def _execute_slice(self, queries: List[AggQuery]) -> List:
+        return self.executor.execute_many(
+            queries,
             target_rel_error=self.target_rel_error,
             max_batches=self.max_batches,
             stop_delta=self.stop_delta,
+            deadline_s=self.deadline_s,
         )
-        if self.result_wrapper is not None:
-            results = [self.result_wrapper(r) for r in results]
-        for (_, ticket), res in zip(batch, results):
-            ticket._result = res
-            ticket._done = True
-        self.last_stats = self.executor.stats
-        self.flushes += 1
-        return results
+
+    def _resolve(self, queries: List[AggQuery], idxs: List[int],
+                 results: List) -> None:
+        """Fill ``results[i]`` for every ``i`` in ``idxs``: bisect on
+        failure, retry singles with bounded exponential backoff, and give a
+        terminal failure a typed ``FailedAnswer`` — never an exception.
+
+        Re-running a slice after a mid-batch failure can re-record some
+        queries' raw answers; recording is idempotent at the synopsis level
+        (duplicate snippets refresh LRU stamps and keep the better answer),
+        so isolation never corrupts learned state.
+        """
+        try:
+            out = self._execute_slice([queries[i] for i in idxs])
+        except BaseException as e:  # noqa: BLE001 — isolate, then type it
+            if len(idxs) > 1:
+                mid = len(idxs) // 2
+                self._resolve(queries, idxs[:mid], results)
+                self._resolve(queries, idxs[mid:], results)
+                return
+            attempts = 1
+            while attempts <= self.max_retries:
+                time.sleep(min(self.backoff_base_s * 2 ** (attempts - 1),
+                               self.backoff_max_s))
+                attempts += 1
+                try:
+                    results[idxs[0]] = self._execute_slice(
+                        [queries[idxs[0]]])[0]
+                    return
+                except BaseException as retry_e:  # noqa: BLE001
+                    e = retry_e
+            results[idxs[0]] = FailedAnswer(
+                error=repr(e), error_type=type(e).__name__, attempts=attempts)
+            return
+        for i, r in zip(idxs, out):
+            results[i] = r
+
+    def flush(self) -> List:
+        """Execute all pending queries in one fused scan.
+
+        Every ticket RESOLVES, unconditionally: to its (possibly wrapped)
+        ``QueryResult``, or to a typed ``FailedAnswer`` if its query keeps
+        failing after bisect isolation and retries. The happy path is one
+        fused ``execute_many`` exactly as before; isolation only engages on
+        failure.
+        """
+        if not self._queue:
+            return []
+        batch, self._queue = self._queue, []
+        queries = [q for q, _ in batch]
+        results: List = [None] * len(batch)
+        try:
+            self._resolve(queries, list(range(len(batch))), results)
+        finally:
+            # Backstop: no ticket may ever hang or silently carry None,
+            # even if the isolation machinery itself raised.
+            out = []
+            for (_, ticket), res in zip(batch, results):
+                if res is None:
+                    res = FailedAnswer(
+                        error="flush aborted before this query resolved",
+                        error_type="RuntimeError", attempts=0)
+                elif (self.result_wrapper is not None
+                      and not isinstance(res, FailedAnswer)):
+                    res = self.result_wrapper(res)
+                ticket._result = res
+                ticket._done = True
+                out.append(res)
+            self.last_stats = self.executor.stats
+            self.flushes += 1
+        return out
 
     def execute(self, queries: List[AggQuery]) -> List:
         """Convenience: submit a workload and return its results in order."""
@@ -125,6 +211,11 @@ class AqpService:
         """Offline learning boundary: drain pending ingest, then refit."""
         self.engine.refit(**kw)
 
+    def heal(self, manager=None, step: Optional[int] = None) -> dict:
+        """Heal quarantined synopses (optionally from a checkpoint's last
+        good state) and rejoin them to serving; ``{state_key: healed}``."""
+        return self.engine.heal(manager, step)
+
     def snapshot(self, manager, step: int):
         """Checkpoint the learned state (drains first; see repro.ft).
 
@@ -136,9 +227,15 @@ class AqpService:
 
     def stats(self) -> dict:
         """Operator snapshot: store placement/occupancy/back-pressure plus
-        this service's microbatching counters."""
+        this service's microbatching counters and serving health."""
+        from repro.ft import faults
+
         return {
             "store": self.engine.store.stats(),
             "flushes": self.flushes,
             "pending": self.pending,
+            "health": {
+                "quarantined": self.engine.store.quarantined(),
+                "faults": faults.stats(),
+            },
         }

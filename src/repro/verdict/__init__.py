@@ -19,7 +19,7 @@ from repro.core.store import (
     ShardedSynopsisStore,
     SynopsisStore,
 )
-from repro.verdict.answer import Cell, PlanReport, QueryAnswer
+from repro.verdict.answer import Cell, FailedAnswer, PlanReport, QueryAnswer
 from repro.verdict.query import (
     QueryBuilder,
     any_of,
@@ -34,6 +34,7 @@ __all__ = [
     "Cell",
     "EngineConfig",
     "ErrorBudget",
+    "FailedAnswer",
     "LocalSynopsisStore",
     "PlanReport",
     "QueryAnswer",

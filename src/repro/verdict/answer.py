@@ -69,6 +69,12 @@ class QueryAnswer:
     ``final`` is False only for the intermediate refinements yielded by
     ``Session.stream``. ``truncated_groups`` surfaces group-by cells dropped
     by the planner's ``n_max`` cap (see ``SnippetPlan.truncated_groups``).
+
+    ``degraded``/``degraded_reasons``: the answer is honest but weaker than
+    a healthy engine would serve — quarantined synopses left their groups
+    on the raw sample estimate (Theorem 1's floor), or a deadline returned
+    the best-so-far answer with its wider CI. Reasons are
+    ``{state_key | "deadline": description}``.
     """
 
     cells: Tuple[Cell, ...]
@@ -78,6 +84,14 @@ class QueryAnswer:
     unsupported_reason: Optional[str] = None
     truncated_groups: int = 0
     final: bool = True
+    degraded: bool = False
+    degraded_reasons: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def failed(self) -> bool:
+        """Degradation-ladder bottom check: a ``QueryAnswer`` always carries
+        a valid estimate (``FailedAnswer.failed`` is True)."""
+        return False
 
     @staticmethod
     def from_result(result, final: bool = True) -> "QueryAnswer":
@@ -90,6 +104,8 @@ class QueryAnswer:
             unsupported_reason=result.unsupported_reason,
             truncated_groups=result.truncated_groups,
             final=final,
+            degraded=bool(getattr(result, "degraded", False)),
+            degraded_reasons=dict(getattr(result, "degraded_reasons", {})),
         )
 
     def max_rel_error(self, delta: float = 0.95) -> float:
@@ -103,6 +119,34 @@ class QueryAnswer:
                 f"answer has {len(self.cells)} cells; use .cells directly"
             )
         return self.cells[0].estimate
+
+
+@dataclasses.dataclass(frozen=True)
+class FailedAnswer:
+    """Typed terminal failure for ONE query — the bottom rung of the
+    degradation ladder (improved → raw-sample → ``FailedAnswer``).
+
+    ``AqpService.flush`` resolves a poison query's ticket with this after
+    bisect isolation and bounded retries exhaust: the query failed, but it
+    failed ALONE (the rest of its microbatch answered normally) and it
+    failed LOUDLY (a typed value, never a hung ticket or a silent None).
+    Mirrors ``QueryAnswer``'s shape loosely (``cells``/``failed``/``final``)
+    so serving code can branch on ``answer.failed`` uniformly.
+    """
+
+    error: str  # repr of the terminal exception
+    error_type: str  # exception class name (e.g. "InjectedFault")
+    attempts: int  # execution attempts spent before giving up
+    final: bool = True
+    cells: Tuple = ()
+
+    @property
+    def failed(self) -> bool:
+        return True
+
+    def __str__(self) -> str:
+        return (f"FailedAnswer({self.error_type} after {self.attempts} "
+                f"attempt{'s' if self.attempts != 1 else ''}: {self.error})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +183,10 @@ class PlanReport:
     placement: dict = dataclasses.field(default_factory=dict)
     scan_placement: str = "local"
     scan_evaluator: str = "oracle"
+    # state_key -> quarantine reason for every currently-quarantined
+    # synopsis this query's keys would touch: the query WILL serve, but its
+    # affected groups stay on the raw sample estimate until heal().
+    quarantined: dict = dataclasses.field(default_factory=dict)
 
     def __str__(self) -> str:
         head = ("supported" if self.supported
@@ -157,5 +205,10 @@ class PlanReport:
                 f"  agg_key={key}: Q-bucket={self.q_buckets[key]}"
                 f" fill-bucket={self.fill_buckets[key]}"
                 f" placement={where}"
+            )
+        for name, reason in sorted(self.quarantined.items()):
+            lines.append(
+                f"  QUARANTINED {name}: serving raw sample estimates"
+                f" ({reason})"
             )
         return "\n".join(lines)

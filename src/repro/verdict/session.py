@@ -22,6 +22,7 @@ shard occupancy and ingest back-pressure.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Iterator, List, Optional, Sequence, Union
 
 from repro.aqp import queries as Q
@@ -35,8 +36,14 @@ from repro.aqp.plan import (
 )
 from repro.aqp.relation import Relation
 from repro.core.engine import EngineConfig, VerdictEngine
-from repro.core.store import ShardedSynopsisStore, SynopsisStore, group_rows
+from repro.core.store import (
+    ShardedSynopsisStore,
+    SynopsisStore,
+    group_rows,
+    state_key,
+)
 from repro.core.types import bucket_size
+from repro.ft import faults
 from repro.verdict.answer import PlanReport, QueryAnswer
 from repro.verdict.query import QueryBuilder
 
@@ -52,11 +59,17 @@ class ErrorBudget:
     max_batches: hard cap on sample batches (None: the engine's budget).
     delta: confidence level of the stopping bound (None: the engine's
         ``report_delta``).
+    deadline_s: per-query wall-clock bound (None: unbounded). On expiry the
+        best-so-far answer returns with its honest (wider) CI, flagged
+        ``degraded`` with a ``"deadline"`` reason — bounded response time
+        without ever returning an invalid estimate. At least one sample
+        batch always runs.
     """
 
     target_rel_error: Optional[float] = None
     max_batches: Optional[int] = None
     delta: Optional[float] = None
+    deadline_s: Optional[float] = None
 
 
 def connect(relation: Relation,
@@ -138,6 +151,7 @@ class Session:
             target_rel_error=budget.target_rel_error,
             max_batches=budget.max_batches,
             stop_delta=budget.delta,
+            deadline_s=budget.deadline_s,
         )
         return [QueryAnswer.from_result(r) for r in results]
 
@@ -160,12 +174,14 @@ class Session:
                               scan_placement=scan, scan_evaluator=evaluator)
         n_total = lp.plan.snippets.n
         n_unique = wp.stats.n_snippets_fused
-        q_buckets, fill_buckets, placement = {}, {}, {}
+        q_buckets, fill_buckets, placement, quarantined = {}, {}, {}, {}
         for key, rows in group_rows(lp.plan.snippets):
             q_buckets[key] = bucket_size(len(rows), eng.config.min_q_bucket)
             syn = eng.store.get(key)
             fill_buckets[key] = syn._fill_bucket() if syn is not None else 0
             placement[key] = eng.store.describe_placement(key)
+            if syn is not None and syn.quarantined:
+                quarantined[state_key(key)] = syn.quarantine_reason
         return PlanReport(
             supported=lp.supported,
             unsupported_reason=lp.reason,
@@ -180,6 +196,7 @@ class Session:
             placement=placement,
             scan_placement=scan,
             scan_evaluator=evaluator,
+            quarantined=quarantined,
         )
 
     # ---------------------------------------------------------------- stream
@@ -204,12 +221,15 @@ class Session:
             wp.fused if lp.supported else wp.fused_raw,
             self._executor._eval if lp.supported else plain_eval,
         )
+        deadline = (None if budget.deadline_s is None
+                    else time.monotonic() + float(budget.deadline_s))
         for res, final in replay_rounds(
             eng, lp, phys,
             target_rel_error=budget.target_rel_error,
             max_batches=budget.max_batches,
             stop_delta=budget.delta,
             every_batch=True,
+            deadline=deadline,
         ):
             yield QueryAnswer.from_result(res, final=final)
 
@@ -236,12 +256,31 @@ class Session:
         tuples only; ``pad_rows`` is the masking overhead). ``workload``:
         fusion accounting of the most recent execute/execute_many call —
         its ``tuples_scanned`` likewise never counts padding.
+        ``health``: quarantined synopses (``{state_key: reason}`` — those
+        keys serve raw sample estimates until ``heal()``) and, during a
+        chaos run, the active fault plan's per-point call/fire counters.
         """
         return {
             "store": self.engine.store.stats(),
             "scan": self._executor.placement.stats(),
             "workload": dataclasses.asdict(self.last_stats),
+            "health": {
+                "quarantined": self.engine.store.quarantined(),
+                "faults": faults.stats(),
+            },
         }
+
+    def heal(self, manager=None, step: Optional[int] = None) -> dict:
+        """Heal every quarantined synopsis and rejoin it to serving.
+
+        With a ``CheckpointManager``, keys restore from the last good
+        committed checkpoint and replay their parked ingest batches;
+        without one they rebuild from their own row arrays. Returns
+        ``{state_key: healed}`` for the keys that were quarantined — after
+        a successful heal the store is bitwise-identical to one that never
+        failed (pinned by ``tests/test_faults.py``).
+        """
+        return self.engine.heal(manager, step)
 
     def save(self, manager, step: int):
         """Checkpoint the learned synopses through a CheckpointManager."""
@@ -269,4 +308,5 @@ class Session:
                           target_rel_error=budget.target_rel_error,
                           max_batches=budget.max_batches,
                           stop_delta=budget.delta,
+                          deadline_s=budget.deadline_s,
                           result_wrapper=QueryAnswer.from_result)

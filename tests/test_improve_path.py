@@ -20,7 +20,11 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.synopsis import Synopsis, _improve_padded
+from repro.core.synopsis import (
+    Synopsis,
+    SynopsisQuarantinedError,
+    _improve_padded,
+)
 from repro.core.types import (
     AVG,
     FREQ,
@@ -240,13 +244,18 @@ def test_add_is_nonblocking_and_drain_is_the_barrier():
     assert len(syn._order) == 3
 
 
-def test_failed_ingest_poisons_the_queue():
-    """A mid-apply failure may leave the model half-mutated, so the queue
-    must stop applying queued batches and keep re-raising at every barrier —
-    a poisoned synopsis never silently serves or checkpoints."""
+def test_failed_ingest_quarantines_not_poisons():
+    """A mid-apply failure QUARANTINES this synopsis instead of poisoning
+    every later barrier: drain() stays a plain barrier (never raises), the
+    failed batch and everything after it park unapplied in FIFO order,
+    improve degrades to the raw sample estimate, state_dict refuses with a
+    typed error, and heal() replays the parked batches to a state bitwise
+    identical to a synopsis that never failed."""
     rng = np.random.default_rng(6)
     sch = _schema()
     syn = Synopsis(sch, capacity=16, async_ingest=True)
+    b1 = (_random_batch(rng, sch, 2), np.ones(2), np.full(2, 0.1))
+    b2 = (_random_batch(rng, sch, 2), np.full(2, 2.0), np.full(2, 0.2))
     applied = {"n": 0}
 
     def boom(*args):
@@ -254,15 +263,36 @@ def test_failed_ingest_poisons_the_queue():
         raise ValueError("injected ingest failure")
 
     syn._apply_add = boom
-    syn.add(_random_batch(rng, sch, 2), np.ones(2), np.full(2, 0.1))
-    syn.add(_random_batch(rng, sch, 2), np.ones(2), np.full(2, 0.1))
-    with pytest.raises(RuntimeError, match="async synopsis ingest"):
-        syn.drain()
-    assert applied["n"] == 1  # later batches were discarded, not applied
-    with pytest.raises(RuntimeError, match="async synopsis ingest"):
-        syn.drain()  # still poisoned
-    with pytest.raises(RuntimeError, match="async synopsis ingest"):
-        syn.state_dict()  # a poisoned synopsis refuses to checkpoint
+    syn.add(*b1)
+    syn.add(*b2)
+    syn.drain()  # plain barrier — a failed apply no longer raises here
+    assert applied["n"] == 1  # batch 1 failed; batch 2 parked, never applied
+    assert syn.quarantined
+    assert "injected ingest failure" in syn.quarantine_reason
+    stats = syn.ingest_stats()
+    assert stats["quarantined"] and stats["quarantine_count"] == 1
+    assert stats["unapplied"] == 2  # the failed batch AND the one behind it
+    # Serving degrades to the raw floor (Theorem 1's equality case).
+    raw = RawAnswer(theta=jnp.asarray([1.5, 2.5]), beta2=jnp.asarray([0.3, 0.4]))
+    imp = syn.improve(_random_batch(rng, sch, 2), raw)
+    np.testing.assert_array_equal(np.asarray(imp.theta), [1.5, 2.5])
+    np.testing.assert_array_equal(np.asarray(imp.beta2), [0.3, 0.4])
+    assert not bool(np.asarray(imp.accepted).any())
+    with pytest.raises(SynopsisQuarantinedError):
+        syn.state_dict()  # a half-applied model never checkpoints
+    # Heal: restore the real applier and replay the parked batches in order.
+    del syn._apply_add
+    assert syn.heal()
+    assert not syn.quarantined
+    assert syn.ingest_stats()["unapplied"] == 0
+    twin = Synopsis(sch, capacity=16, async_ingest=False)
+    twin.add(*b1)
+    twin.add(*b2)
+    got, want = syn.state_dict(), twin.state_dict()
+    for k in want:
+        if k == "ingest_high_water":  # telemetry, not model state
+            continue
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
 
 
 def test_state_dict_returns_copies_not_views():

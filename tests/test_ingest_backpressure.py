@@ -1,12 +1,18 @@
-"""Async-ingest back-pressure: bounded queue, shed-to-sync under overload,
-high-water telemetry in stats/state_dict, unchanged drain() semantics."""
+"""Async-ingest back-pressure and failure quarantine: bounded queue,
+shed-to-sync under overload, high-water telemetry in stats/state_dict,
+drain() as a never-raising barrier, per-key quarantine with raw-floor
+serving, and heal() back to bitwise parity with a never-failed store."""
 import time
+import warnings
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.engine import EngineConfig
+from repro.core.store import LocalSynopsisStore, state_key
 from repro.core.synopsis import MAX_PENDING_DEFAULT, Synopsis
-from repro.core.types import AVG, Schema, make_snippets
+from repro.core.types import AVG, FREQ, RawAnswer, Schema, make_snippets
 
 
 def _schema():
@@ -40,6 +46,8 @@ def test_default_bound_and_idle_stats():
     assert syn.max_pending == MAX_PENDING_DEFAULT
     assert syn.ingest_stats() == {
         "max_pending": MAX_PENDING_DEFAULT, "high_water": 0, "shed_count": 0,
+        "quarantined": False, "quarantine_reason": None,
+        "unapplied": 0, "quarantine_count": 0,
     }
 
 
@@ -106,3 +114,124 @@ def test_drain_semantics_unchanged():
     syn.drain()  # idempotent
     assert syn.n > 0
     assert syn.ingest_stats()["high_water"] <= 1
+
+
+# ---------------------------------------------------------------- quarantine
+def _freq_batch(rng, sch, n):
+    ranges = []
+    for _ in range(n):
+        r = {}
+        for d in range(sch.n_num):
+            a = rng.uniform(0, 0.6)
+            r[d] = (a, a + rng.uniform(0.05, 0.4))
+        ranges.append(r)
+    return make_snippets(sch, agg=FREQ, measure=0, num_ranges=ranges)
+
+
+def test_store_quarantine_blast_radius_and_heal():
+    """Store-level blast radius: one key's failed apply quarantines THAT
+    synopsis only. store.drain() stays a plain barrier, the healthy key
+    keeps improving, the sick key serves the raw floor (reported via the
+    health dict), checkpointing skips it with a warning instead of
+    failing, and store.heal() restores bitwise parity with a twin that
+    never failed."""
+    rng = np.random.default_rng(11)
+    sch = _schema()
+    cfg = EngineConfig(capacity=64, async_ingest=True)
+    store = LocalSynopsisStore(sch, cfg)
+    avg_key, freq_key = (AVG, 0), (FREQ, 0)
+    sick = store.for_key(avg_key)
+    assert sick.name == state_key(avg_key)
+
+    def boom(*args):
+        raise ValueError("injected apply failure")
+
+    sick._apply_add = boom
+    avg_adds = [( _batch(rng, sch, 3), rng.normal(1.0, 0.3, 3),
+                  rng.uniform(0.01, 0.05, 3)) for _ in range(2)]
+    freq_adds = [(_freq_batch(rng, sch, 3), rng.uniform(10, 20, 3),
+                  rng.uniform(0.01, 0.05, 3)) for _ in range(2)]
+    for (b, th, b2), (fb, fth, fb2) in zip(avg_adds, freq_adds):
+        store.record(b, RawAnswer(jnp.asarray(th), jnp.asarray(b2)))
+        store.record(fb, RawAnswer(jnp.asarray(fth), jnp.asarray(fb2)))
+    store.drain()  # never raises — the failure is quarantined per key
+    assert list(store.quarantined()) == [state_key(avg_key)]
+    assert "injected apply failure" in store.quarantined()[state_key(avg_key)]
+    assert store.stats()["quarantined"] == store.quarantined()
+    healthy = store.get(freq_key)
+    assert not healthy.quarantined and healthy.n > 0
+
+    # Sick key degrades to the raw floor and reports into `health`.
+    probe = _batch(rng, sch, 2)
+    raw = RawAnswer(jnp.asarray([1.0, 2.0]), jnp.asarray([0.3, 0.4]))
+    health = {}
+    imp = store.improve_groups(probe, raw, health=health)
+    np.testing.assert_array_equal(np.asarray(imp.theta), [1.0, 2.0])
+    assert not bool(np.asarray(imp.accepted).any())
+    assert list(health) == [state_key(avg_key)]
+
+    # Healthy key still improves through the same store call.
+    fprobe = _freq_batch(rng, sch, 2)
+    fhealth = {}
+    store.improve_groups(
+        fprobe, RawAnswer(jnp.asarray([12.0, 13.0]), jnp.asarray([0.3, 0.4])),
+        health=fhealth)
+    assert fhealth == {}
+
+    # Checkpointing skips the sick key with a warning — one bad key must
+    # not block persisting the healthy learned state.
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        sd = store.state_dict()
+    assert state_key(freq_key) in sd and state_key(avg_key) not in sd
+    assert any("quarantined" in str(w.message) for w in caught)
+
+    # Heal: the parked batches replay in order; the healed synopsis is
+    # bitwise identical to one that never failed.
+    del sick._apply_add
+    assert store.heal() == {state_key(avg_key): True}
+    assert store.quarantined() == {}
+    twin = Synopsis(sch, capacity=64, async_ingest=False)
+    for b, th, b2 in avg_adds:
+        twin.add(b, th, b2)
+    got, want = sick.state_dict(), twin.state_dict()
+    for k in want:
+        if k == "ingest_high_water":
+            continue
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)
+
+
+def test_heal_from_last_good_state_replays_parked_batches():
+    """heal(states=...) restores the last-good snapshot, then replays the
+    parked batches — the post-heal state matches applying every batch on
+    an unfailed synopsis."""
+    rng = np.random.default_rng(12)
+    sch = _schema()
+    cfg = EngineConfig(capacity=64, async_ingest=True)
+    store = LocalSynopsisStore(sch, cfg)
+    key = (AVG, 0)
+    adds = [(_batch(rng, sch, 3), rng.normal(1.0, 0.3, 3),
+             rng.uniform(0.01, 0.05, 3)) for _ in range(4)]
+    for b, th, b2 in adds[:2]:
+        store.record(b, RawAnswer(jnp.asarray(th), jnp.asarray(b2)))
+    good = store.state_dict()  # last-good checkpoint payload
+    syn = store.get(key)
+
+    def boom(*args):
+        raise ValueError("apply failure after the checkpoint")
+
+    syn._apply_add = boom
+    for b, th, b2 in adds[2:]:
+        store.record(b, RawAnswer(jnp.asarray(th), jnp.asarray(b2)))
+    store.drain()
+    assert store.quarantined()
+    del syn._apply_add
+    assert store.heal(states=good) == {state_key(key): True}
+    twin = Synopsis(sch, capacity=64, async_ingest=False)
+    for b, th, b2 in adds:
+        twin.add(b, th, b2)
+    got, want = syn.state_dict(), twin.state_dict()
+    for k in want:
+        if k == "ingest_high_water":
+            continue
+        np.testing.assert_array_equal(got[k], want[k], err_msg=k)

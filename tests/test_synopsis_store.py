@@ -240,8 +240,10 @@ def test_session_stats_and_explain_placement(relation, workload,
     for entry in st["store"]["keys"].values():
         assert {"n", "capacity", "shard", "placement", "ingest"} <= set(entry)
         assert entry["placement"] == "local"
-        assert {"max_pending", "high_water", "shed_count"} == set(
-            entry["ingest"])
+        assert {"max_pending", "high_water", "shed_count", "quarantined",
+                "quarantine_reason", "unapplied",
+                "quarantine_count"} == set(entry["ingest"])
+        assert not entry["ingest"]["quarantined"]
     sharded_session = vd.connect(relation, mesh_cfg, mesh=mesh)
     sharded_session.execute_many(workload[:6])
     st2 = sharded_session.stats()
