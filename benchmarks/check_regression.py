@@ -66,6 +66,12 @@ def current_metrics(improve_report: str = "", shard_report: str = "") -> dict:
     from repro.ft import faults
 
     rows["faults/hooks_inactive"] = float(not faults.active())
+    # Static-analysis gate: the invariant checker (jaxpr/StableHLO + AST
+    # rules, repro.analysis) must be clean in strict mode. Baseline is 0
+    # with higher_is_better=false, so ANY violation fails the gate.
+    from repro.analysis import violation_count
+
+    rows["analysis/violations"] = float(violation_count(strict=True))
     return rows
 
 
@@ -112,6 +118,10 @@ def update(rows: dict) -> dict:
         "scan/bytes_per_sec_frac_of_peak": True,
         # Chaos hooks must be disarmed (zero-cost) during benchmark runs.
         "faults/hooks_inactive": True,
+        # The static invariant checker (repro.analysis --strict) is clean:
+        # canonical fold shapes/order, collective-free mask build, bounded
+        # compile cache, f64 policy, access-path discipline.
+        "analysis/violations": False,
     }
     return {
         "tolerance": 0.25,

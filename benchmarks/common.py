@@ -5,7 +5,6 @@ import time
 
 import numpy as np
 
-from repro.aqp import workload as W
 from repro.aqp.queries import assemble_results, decompose
 from repro.core.engine import EngineConfig, VerdictEngine
 

@@ -1,0 +1,15 @@
+"""Static analysis of the engine's compiled artifacts and source tree.
+
+Two layers (see ``trace_rules`` / ``ast_rules``), one CLI
+(``python -m repro.analysis --strict``), one benchmark metric
+(``analysis/violations``). This module stays import-light: jax is only
+pulled in when a trace rule actually runs.
+"""
+from repro.analysis.cli import run_repo_analysis, violation_count
+from repro.analysis.findings import (ERROR, INFO, WARN, Finding, gate_count,
+                                     render_json, render_text, sort_findings)
+
+__all__ = [
+    "ERROR", "INFO", "WARN", "Finding", "gate_count", "render_json",
+    "render_text", "sort_findings", "run_repo_analysis", "violation_count",
+]

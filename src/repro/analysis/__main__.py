@@ -1,0 +1,6 @@
+import sys
+
+from repro.analysis.cli import force_topology, main
+
+force_topology()  # before anything imports jax
+sys.exit(main())

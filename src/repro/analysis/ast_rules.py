@@ -1,0 +1,455 @@
+"""Layer 2: lightweight AST rules over the ``repro`` source tree.
+
+Where Layer 1 proves properties of the compiled artifacts, these rules
+enforce the *access-path discipline* that keeps those artifacts the only
+way state flows through the system:
+
+A001  ``.synopses`` access only through the owner (``core/store.py``) and
+      the deprecated ``VerdictEngine.synopses`` shim (``core/engine.py``) —
+      every other caller must go through the ``SynopsisStore`` API so
+      placement/quarantine bookkeeping cannot be bypassed.
+A002  ``Synopsis`` state is mutated only via ``_guarded_apply`` (and its
+      ``heal`` replay): a direct ``_apply_add`` call skips the quarantine
+      fence and lets a failed covariance build corrupt serving state.
+A003  fault-seam registry/call-site coherence: every string passed to
+      ``faults.fire`` is a registered point in ``repro.ft.faults.POINTS``,
+      and every registered point is actually wrapped at >= 1 call site.
+A004  determinism inside ``repro.kernels``: no wall-clock, no RNG — kernel
+      outputs must be pure functions of their operands (bitwise parity
+      depends on it).
+A005  dead-code inventory: every module is imported somewhere (src, tests
+      or benchmarks), registered dynamically, a known entry point, or
+      carries an explicit keep-reason in the allowlist.
+A006  epsilon discipline: no local epsilon literal in the half-open band
+      (1e-15, 1e-5] inside the kernels or the executor — the shared
+      ``RANGE_EPS`` is the single source of truth (the pre-PR-6 parity
+      drift was exactly a kernel-local ``1e-7`` vs the oracle's ``1e-12``).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+from typing import Callable, Dict, List, Optional, Sequence, Set
+
+from repro.analysis.findings import ERROR, INFO, WARN, Finding
+
+SRC_ROOT = pathlib.Path(__file__).resolve().parents[1]  # src/repro
+REPO_ROOT = SRC_ROOT.parents[1]
+
+# --------------------------------------------------------------- allowlists
+
+# A001: the only files allowed to touch `.synopses` / `._synopses`.
+SYNOPSES_ALLOW = ("core/store.py", "core/engine.py")
+# A002: the only (file, enclosing function) pairs allowed to call _apply_add.
+GUARDED_APPLY_ALLOW = ("_guarded_apply", "heal")
+# A006: where the shared epsilon is *defined* (literals allowed there).
+EPSILON_DEF_SITE = ("kernels/__init__.py",)
+
+# A005: modules with no static importer that are kept on purpose.
+# Dynamic registry: configs/* are loaded via importlib from the ARCHS table.
+DYNAMIC_IMPORT_PREFIXES = {
+    "repro.configs.": "registered in repro.configs.ARCHS, "
+                      "loaded via importlib.import_module",
+}
+# Entry points: roots of the import graph by design.
+ENTRY_POINTS = {
+    "repro.launch.train": "CLI trainer (python -m repro.launch.train)",
+    "repro.analysis.__main__": "CLI (python -m repro.analysis)",
+    "repro.analysis.cli": "CLI implementation module",
+}
+# Idle-but-kept: reachable only from tests/benchmarks today; each entry
+# records WHY it stays (the dead-code satellite's explicit allowlist).
+IDLE_KEEP = {
+    "repro.aqp.online": "online-aggregation comparison baseline for the "
+                        "paper's §7 accuracy study",
+    "repro.aqp.workload": "query/workload generator shared by the test "
+                          "suite and every benchmark driver",
+    "repro.launch.cells": "assigned-architecture launch cells; exercised "
+                          "by tests/test_launch_units.py",
+    "repro.launch.roofline": "roofline model behind "
+                             "benchmarks/roofline_report.py",
+    "repro.launch.hlo_analysis": "HLO cost extraction behind "
+                                 "benchmarks/roofline_report.py",
+    "repro.launch.mesh": "mesh topology helpers for the launch cells",
+    "repro.distributed.compression": "gradient/state compression for the "
+                                     "elastic trainer; tests/test_ft.py",
+    "repro.ft.elastic": "elastic re-sharding restore path; "
+                        "tests/test_ft.py",
+    "repro.kernels.fused_masked_scan.ref": "reference oracle for kernel "
+                                           "parity tests and benchmarks",
+    "repro.kernels.gp_batch_infer.ref": "reference oracle for kernel "
+                                        "parity tests and benchmarks",
+    "repro.kernels.range_mask_agg.ref": "reference oracle for kernel "
+                                        "parity tests and benchmarks",
+    "repro.kernels.se_covariance.ref": "reference oracle for kernel "
+                                       "parity tests and benchmarks",
+}
+
+
+# ------------------------------------------------------------- file parsing
+
+
+@dataclasses.dataclass
+class ParsedFile:
+    path: pathlib.Path
+    rel: str  # posix path relative to the scanned root, e.g. "core/store.py"
+    tree: ast.AST
+
+
+def parse_tree(root: pathlib.Path) -> List[ParsedFile]:
+    root = pathlib.Path(root)
+    out = []
+    for p in sorted(root.rglob("*.py")):
+        rel = p.relative_to(root).as_posix()
+        out.append(ParsedFile(p, rel, ast.parse(p.read_text(), str(p))))
+    return out
+
+
+def _loc(pf: ParsedFile, node: ast.AST) -> str:
+    return f"{pf.rel}:{getattr(node, 'lineno', 0)}"
+
+
+# ------------------------------------------------------------------- A001
+
+
+def check_synopses_access(
+    files: Sequence[ParsedFile],
+    allow: Sequence[str] = SYNOPSES_ALLOW,
+) -> List[Finding]:
+    out: List[Finding] = []
+    for pf in files:
+        if pf.rel in allow:
+            continue
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Attribute) \
+                    and node.attr in ("synopses", "_synopses"):
+                out.append(Finding(
+                    "A001", ERROR, _loc(pf, node),
+                    f"direct `.{node.attr}` access outside the store and "
+                    "the deprecated engine shim",
+                    "go through the SynopsisStore API (get/ensure/items/"
+                    "state_dict); the dict is an implementation detail and "
+                    "bypassing it skips placement + quarantine bookkeeping",
+                ))
+    return out
+
+
+# ------------------------------------------------------------------- A002
+
+
+def check_guarded_apply(
+    files: Sequence[ParsedFile],
+    owner_file: str = "core/synopsis.py",
+    allow_fns: Sequence[str] = GUARDED_APPLY_ALLOW,
+) -> List[Finding]:
+    out: List[Finding] = []
+
+    class V(ast.NodeVisitor):
+        def __init__(self, pf: ParsedFile):
+            self.pf = pf
+            self.stack: List[str] = []
+
+        def visit_FunctionDef(self, node):
+            self.stack.append(node.name)
+            self.generic_visit(node)
+            self.stack.pop()
+
+        visit_AsyncFunctionDef = visit_FunctionDef
+
+        def visit_Call(self, node):
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else \
+                fn.id if isinstance(fn, ast.Name) else None
+            if name == "_apply_add":
+                ok = (self.pf.rel == owner_file
+                      and any(s in allow_fns for s in self.stack))
+                if not ok:
+                    out.append(Finding(
+                        "A002", ERROR, _loc(self.pf, node),
+                        "`_apply_add` called outside "
+                        f"{owner_file}:{'/'.join(allow_fns)} — Synopsis "
+                        "state mutated without the quarantine fence",
+                        "route the batch through Synopsis._guarded_apply "
+                        "(add/drain do); a raising _apply_add must park the "
+                        "batch and quarantine, never propagate",
+                    ))
+            self.generic_visit(node)
+
+    for pf in files:
+        V(pf).visit(pf.tree)
+    return out
+
+
+# ------------------------------------------------------------------- A003
+
+
+def check_fault_seams(
+    files: Sequence[ParsedFile],
+    points: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    if points is None:
+        from repro.ft.faults import POINTS as points  # registry of record
+    out: List[Finding] = []
+    seen: Set[str] = set()
+    for pf in files:
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else \
+                fn.id if isinstance(fn, ast.Name) else None
+            if name != "fire" or not node.args:
+                continue
+            arg = node.args[0]
+            if isinstance(arg, ast.Constant) and isinstance(arg.value, str):
+                if arg.value in points:
+                    seen.add(arg.value)
+                else:
+                    out.append(Finding(
+                        "A003", ERROR, _loc(pf, node),
+                        f"fire({arg.value!r}) names a fault seam that is "
+                        "not registered in repro.ft.faults.POINTS",
+                        "add the point to POINTS (with a docstring line "
+                        "describing the seam) or fix the typo; unregistered "
+                        "seams are invisible to FaultPlan and chaos tests",
+                    ))
+            else:
+                out.append(Finding(
+                    "A003", WARN, _loc(pf, node),
+                    "fire() called with a non-literal point name — the "
+                    "registry check cannot verify it statically",
+                    "pass the seam name as a string literal",
+                ))
+    for point in points:
+        if point not in seen:
+            out.append(Finding(
+                "A003", ERROR, f"registry:{point}",
+                f"fault seam {point!r} is registered in POINTS but never "
+                "wrapped at any call site",
+                "call faults.fire({!r}) at the seam it documents, or drop "
+                "the registration".format(point),
+            ))
+    return out
+
+
+# ------------------------------------------------------------------- A004
+
+_CLOCK_RNG_MODULES = {"time", "random", "secrets", "datetime"}
+_RNG_ATTR_BASES = {"np", "numpy", "jax"}
+
+
+def _in_kernels(rel: str) -> bool:
+    return rel.startswith("kernels/")
+
+
+def check_kernel_determinism(
+    files: Sequence[ParsedFile],
+    scope: Optional[Callable[[str], bool]] = _in_kernels,
+) -> List[Finding]:
+    out: List[Finding] = []
+    for pf in files:
+        if scope is not None and not scope(pf.rel):
+            continue
+        for node in ast.walk(pf.tree):
+            bad = None
+            if isinstance(node, ast.Import):
+                mods = [a.name.split(".")[0] for a in node.names]
+                hit = sorted(set(mods) & _CLOCK_RNG_MODULES)
+                if hit:
+                    bad = f"imports {', '.join(hit)}"
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                top = node.module.split(".")[0]
+                if top in _CLOCK_RNG_MODULES:
+                    bad = f"imports from {node.module}"
+                elif node.module == "jax" and any(
+                        a.name == "random" for a in node.names):
+                    bad = "imports jax.random"
+            elif isinstance(node, ast.Attribute) and node.attr == "random" \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id in _RNG_ATTR_BASES:
+                bad = f"uses {node.value.id}.random"
+            if bad:
+                out.append(Finding(
+                    "A004", ERROR, _loc(pf, node),
+                    f"kernel module {bad} — wall-clock/RNG inside "
+                    "repro.kernels breaks determinism",
+                    "kernel outputs must be pure functions of their "
+                    "operands (bitwise parity depends on it); thread keys/"
+                    "timestamps in from the caller if truly needed",
+                ))
+    return out
+
+
+# ------------------------------------------------------------------- A005
+
+
+def _module_name(rel: str) -> str:
+    parts = rel[:-3].split("/")  # strip .py
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(["repro"] + parts) if parts else "repro"
+
+
+def _imports_of(tree: ast.AST, self_mod: str) -> Set[str]:
+    """Absolute dotted names this module imports (repro.* only)."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro" or a.name.startswith("repro."):
+                    out.add(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = self_mod.split(".")
+                # from the module's package, go up (level - 1) more
+                base = base[: len(base) - node.level]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            if not (mod == "repro" or mod.startswith("repro.")):
+                continue
+            out.add(mod)
+            for a in node.names:
+                out.add(f"{mod}.{a.name}")  # may be a symbol; filtered later
+    return out
+
+
+def check_dead_code(
+    src_root: pathlib.Path = SRC_ROOT,
+    importer_roots: Sequence[pathlib.Path] = (),
+    idle_keep: Dict[str, str] = IDLE_KEEP,
+    entry_points: Dict[str, str] = ENTRY_POINTS,
+) -> List[Finding]:
+    files = parse_tree(src_root)
+    modules = {_module_name(pf.rel): pf for pf in files}
+    importers: Dict[str, Set[str]] = {m: set() for m in modules}
+
+    def credit(targets: Set[str], importer: str, external: bool):
+        for t in targets:
+            if t not in modules:
+                continue
+            tag = f"{'ext:' if external else ''}{importer}"
+            # importing repro.x.y also executes every ancestor __init__
+            parts = t.split(".")
+            for i in range(2, len(parts) + 1):
+                anc = ".".join(parts[:i])
+                if anc in importers and anc != importer:
+                    importers[anc].add(tag)
+
+    for pf in files:
+        mod = _module_name(pf.rel)
+        credit(_imports_of(pf.tree, mod), mod, external=False)
+    for root in importer_roots:
+        root = pathlib.Path(root)
+        if not root.exists():
+            continue
+        for ext in parse_tree(root):
+            credit(_imports_of(ext.tree, "external"),
+                   f"{root.name}/{ext.rel}", external=True)
+
+    out: List[Finding] = []
+    for mod in sorted(modules):
+        pf = modules[mod]
+        dyn = next((r for p, r in DYNAMIC_IMPORT_PREFIXES.items()
+                    if mod.startswith(p)), None)
+        if dyn is not None:
+            out.append(Finding("A005", INFO, pf.rel,
+                               f"{mod}: no static importer ({dyn})", ""))
+            continue
+        if mod in entry_points:
+            continue
+        who = importers[mod]
+        src_importers = {w for w in who if not w.startswith("ext:")}
+        if src_importers:
+            continue
+        if mod in idle_keep:
+            out.append(Finding(
+                "A005", INFO, pf.rel,
+                f"{mod}: idle (no src importer); kept: {idle_keep[mod]}",
+                "",
+            ))
+        elif who:
+            out.append(Finding(
+                "A005", WARN, pf.rel,
+                f"{mod}: reachable only from "
+                f"{', '.join(sorted(w[4:] for w in who))} — idle in src",
+                "add an IDLE_KEEP entry in repro/analysis/ast_rules.py "
+                "with the reason it stays, or delete it",
+            ))
+        else:
+            out.append(Finding(
+                "A005", ERROR, pf.rel,
+                f"{mod}: dead module — nothing in src, tests or benchmarks "
+                "imports it",
+                "delete it (git history keeps it), or register the dynamic "
+                "import / entry point that reaches it",
+            ))
+    return out
+
+
+# ------------------------------------------------------------------- A006
+
+EPS_BAND_LO = 1e-15
+EPS_BAND_HI = 1e-5
+
+
+def _in_epsilon_scope(rel: str) -> bool:
+    return rel.startswith("kernels/") or rel == "aqp/executor.py"
+
+
+def check_epsilon_discipline(
+    files: Sequence[ParsedFile],
+    scope: Optional[Callable[[str], bool]] = _in_epsilon_scope,
+    def_sites: Sequence[str] = EPSILON_DEF_SITE,
+) -> List[Finding]:
+    out: List[Finding] = []
+    for pf in files:
+        if pf.rel in def_sites:
+            continue
+        if scope is not None and not scope(pf.rel):
+            continue
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Constant) \
+                    and isinstance(node.value, float) \
+                    and EPS_BAND_LO < abs(node.value) <= EPS_BAND_HI:
+                out.append(Finding(
+                    "A006", ERROR, _loc(pf, node),
+                    f"local epsilon literal {node.value!r} in the scan "
+                    "plane — epsilon drift between kernel and oracle",
+                    "import RANGE_EPS from repro.kernels (the single "
+                    "epsilon of record; the pre-PR-6 parity drift was a "
+                    "kernel-local 1e-7 vs the oracle's 1e-12)",
+                ))
+    return out
+
+
+# ------------------------------------------------------------------- driver
+
+AST_RULES = ("A001", "A002", "A003", "A004", "A005", "A006")
+
+
+def run_ast_rules(
+    src_root: pathlib.Path = SRC_ROOT,
+    repo_root: pathlib.Path = REPO_ROOT,
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    rules = set(AST_RULES if rules is None else rules)
+    files = parse_tree(src_root)
+    out: List[Finding] = []
+    if "A001" in rules:
+        out.extend(check_synopses_access(files))
+    if "A002" in rules:
+        out.extend(check_guarded_apply(files))
+    if "A003" in rules:
+        out.extend(check_fault_seams(files))
+    if "A004" in rules:
+        out.extend(check_kernel_determinism(files))
+    if "A005" in rules:
+        out.extend(check_dead_code(
+            src_root,
+            importer_roots=(repo_root / "tests", repo_root / "benchmarks"),
+        ))
+    if "A006" in rules:
+        out.extend(check_epsilon_discipline(files))
+    return out

@@ -1,0 +1,84 @@
+"""``python -m repro.analysis`` — run the invariant checker and gate on it.
+
+Exit status is the number of gating findings (0 = contracts hold), so CI
+can use the process status directly. ``--strict`` (the CI mode) also gates
+on warnings, forcing every idle module / unverifiable seam into an explicit
+allowlist entry rather than a lingering warning.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import List, Optional, Sequence
+
+from repro.analysis.findings import (Finding, gate_count, render_json,
+                                     render_text)
+
+LAYERS = ("trace", "ast")
+
+
+def force_topology() -> None:
+    """Force the fake multi-device host topology (mirrors conftest.py).
+
+    Must run BEFORE jax initializes its backend — the sharded-mask-build
+    rule (T003) wants a real multi-shard mesh. If jax is already imported
+    (e.g. the checker is called from a test process) this is a no-op and
+    the mesh degenerates to however many devices exist; the rules still
+    apply.
+    """
+    if "jax" in sys.modules:
+        return
+    forced = int(os.environ.get("REPRO_FORCE_HOST_DEVICES", "8"))
+    flags = os.environ.get("XLA_FLAGS", "")
+    if forced > 1 and "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + f" --xla_force_host_platform_device_count={forced}"
+        ).strip()
+
+
+def run_repo_analysis(
+    layers: Sequence[str] = LAYERS,
+    rules: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """All findings for the repository (both layers by default)."""
+    force_topology()
+    out: List[Finding] = []
+    if "trace" in layers:
+        from repro.analysis.trace_rules import run_trace_rules
+        out.extend(run_trace_rules(rules=rules))
+    if "ast" in layers:
+        from repro.analysis.ast_rules import run_ast_rules
+        out.extend(run_ast_rules(rules=rules))
+    if rules is not None:
+        out = [f for f in out if f.rule in set(rules)]
+    return out
+
+
+def violation_count(strict: bool = True) -> int:
+    """The ``analysis/violations`` benchmark metric: gating finding count."""
+    return gate_count(run_repo_analysis(), strict=strict)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant checker for the scan plane's parity "
+                    "and performance contracts",
+    )
+    ap.add_argument("--strict", action="store_true",
+                    help="gate on warnings too (CI mode)")
+    ap.add_argument("--layer", choices=("all",) + LAYERS, default="all",
+                    help="run only the trace/HLO layer or only the AST "
+                         "layer (default: all)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule ids to run (e.g. T001,A005)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    args = ap.parse_args(argv)
+
+    layers = LAYERS if args.layer == "all" else (args.layer,)
+    rules = args.rules.split(",") if args.rules else None
+    findings = run_repo_analysis(layers=layers, rules=rules)
+    render = render_json if args.format == "json" else render_text
+    print(render(findings))
+    return gate_count(findings, strict=args.strict)

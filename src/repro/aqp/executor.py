@@ -35,9 +35,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.types import AVG, FREQ, RawAnswer, SnippetBatch
+from repro.core.types import AVG, SnippetBatch
 from repro.ft import faults
 from repro.kernels import RANGE_EPS, SCAN_TILE_Q, SCAN_TILE_T
 
@@ -157,7 +156,7 @@ def _partials_from_mask(mask, measures, snippets: SnippetBatch,
     return Partials(sums, sumsq, out[:, 2 * m], scanned)
 
 
-@partial(jax.jit, static_argnames=())
+@jax.jit
 def eval_partials(num_normalized, cat, measures, snippets: SnippetBatch,
                   valid=None) -> Partials:
     """Partial statistics for one tuple block (pure-jnp oracle path).
@@ -221,7 +220,7 @@ def pad_tuple_axis(n_shards: int, num_normalized, cat, measures, valid=None):
     )
 
 
-@partial(jax.jit, static_argnames=())
+@jax.jit
 def _mask_rows(num_normalized, cat, valid, snippets):
     return predicate_mask(num_normalized, cat, snippets, valid=valid)
 

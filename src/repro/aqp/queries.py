@@ -15,10 +15,8 @@ COUNT(*) = FREQ × cardinality, SUM = AVG × COUNT (§2.3 "Aggregate Computation
 from __future__ import annotations
 
 import dataclasses
-import itertools
-from typing import List, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.types import AVG, FREQ, Schema, SnippetBatch, make_snippets

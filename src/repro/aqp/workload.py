@@ -12,8 +12,7 @@
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

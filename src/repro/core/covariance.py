@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import erf
 
-from repro.core.types import AVG, GPParams, Schema, SnippetBatch
+from repro.core.types import AVG, GPParams, SnippetBatch
 
 # Widening for degenerate (equality) numeric ranges, in normalized units.
 EPS_WIDTH = 1e-6

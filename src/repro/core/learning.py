@@ -13,7 +13,6 @@ NLL exactly with jax.grad and run Adam on log-lengthscales — faster and exact
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
 import jax

@@ -14,7 +14,6 @@ s8 collective-permute (vs. f32 all-reduce at 4x the bytes).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

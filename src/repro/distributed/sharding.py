@@ -10,10 +10,8 @@ Alternative rule sets (fsdp / sequence-parallel) are hillclimb levers.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as Pspec
 
 DEFAULT_RULES = {

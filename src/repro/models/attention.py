@@ -9,7 +9,6 @@ their FLOPs are charged to the MODEL/HLO ratio in the roofline table.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

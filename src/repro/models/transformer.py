@@ -7,8 +7,6 @@ Mamba branch, cross-attention) and FFN (dense / MoE). Layer groups are
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ then one optimizer step applies. With ``accum == 1`` the scan disappears.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax

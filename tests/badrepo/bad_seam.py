@@ -1,0 +1,6 @@
+"""A003 fixture: fires a fault seam that is not registered in POINTS."""
+from repro.ft import faults
+
+
+def drain(name):
+    faults.fire("store.drian", key=name)  # typo: not in faults.POINTS

@@ -1,0 +1,5 @@
+"""A002 fixture: mutates Synopsis state without the quarantine fence."""
+
+
+def fast_ingest(syn, item):
+    syn._apply_add(*item)  # skips _guarded_apply: a raise corrupts serving

@@ -1,0 +1,8 @@
+"""A004 fixture: wall-clock and RNG inside a kernel module."""
+import time
+
+import numpy as np
+
+
+def jittery_scan(x):
+    return x * np.random.rand() + time.time()

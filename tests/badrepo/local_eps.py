@@ -1,0 +1,7 @@
+"""A006 fixture: a kernel-local epsilon (the pre-PR-6 drift, literally)."""
+
+EPS = 1e-7  # should be RANGE_EPS from repro.kernels
+
+
+def open_upper(x, hi):
+    return x < hi + EPS

@@ -1,0 +1,5 @@
+"""A005 fixture: a module nothing imports."""
+
+
+def unused():
+    return 42

@@ -1,0 +1,6 @@
+"""A001 fixture: bypasses the SynopsisStore API with a direct dict write."""
+
+
+def clobber(engine, key, syn):
+    engine.synopses[key] = syn  # direct write through the deprecated shim
+    return engine.store._synopses  # and a private-dict read

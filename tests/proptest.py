@@ -6,8 +6,6 @@ mirrors the hypothesis style loosely: ``@given(cases(...))``.
 """
 from __future__ import annotations
 
-import functools
-import itertools
 
 import numpy as np
 

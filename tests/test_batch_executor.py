@@ -1,13 +1,11 @@
 """BatchExecutor: fused-scan accounting, bitwise parity with the sequential
 engine, ground-truth coverage, dedup, and the serving microbatch facade."""
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
 from repro.aqp import workload as W
 from repro.aqp.batch import BatchExecutor
-from repro.aqp.queries import (AggQuery, AggSpec, CatEq, NumRange, TextLike,
-                               decompose)
+from repro.aqp.queries import AggQuery, AggSpec, CatEq, NumRange, TextLike
 from repro.core.engine import EngineConfig, VerdictEngine
 from repro.serving.aqp import AqpService
 from repro.utils.stats import confidence_multiplier

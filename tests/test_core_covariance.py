@@ -1,6 +1,5 @@
 """Covariance math: closed form vs quadrature, limits, structure properties."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

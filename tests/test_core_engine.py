@@ -5,13 +5,12 @@ import jax.numpy as jnp
 import pytest
 
 from repro.aqp import workload as W
-from repro.aqp.queries import AggQuery, AggSpec, Disjunction, NumRange, TextLike
+from repro.aqp.queries import AggQuery, AggSpec, NumRange, TextLike
 from repro.core import covariance as C
 from repro.core import learning
 from repro.core.append import estimate_append_stats
 from repro.core.engine import EngineConfig, VerdictEngine
-from repro.core.types import AVG, GPParams, RawAnswer, Schema, make_snippets
-from repro.core.synopsis import Synopsis
+from repro.core.types import AVG, GPParams, Schema, make_snippets
 
 
 @pytest.fixture(scope="module")

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import covariance as C
 from repro.core import inference as I
-from repro.core.types import AVG, FREQ, GPParams, RawAnswer, Schema, make_snippets
+from repro.core.types import AVG, GPParams, RawAnswer, Schema, make_snippets
 from repro.core.synopsis import Synopsis, inv_append_block, inv_delete_block
 import proptest as pt
 

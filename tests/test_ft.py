@@ -1,8 +1,6 @@
 """Fault tolerance: checkpoint round-trip + atomicity, restart-equivalence,
 elastic plan, pipeline determinism + straggler assignment."""
 import os
-import subprocess
-import sys
 
 import numpy as np
 import jax

@@ -28,7 +28,6 @@ from jax.sharding import Mesh
 
 from repro.aqp.executor import (
     ScanPlacement,
-    ShardedScanPlacement,
     eval_partials,
     eval_partials_sharded,
     masked_tile_fold,

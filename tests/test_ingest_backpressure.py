@@ -7,7 +7,6 @@ import warnings
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.engine import EngineConfig
 from repro.core.store import LocalSynopsisStore, state_key

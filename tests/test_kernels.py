@@ -1,13 +1,11 @@
 """Per-kernel allclose vs pure-jnp oracles, with shape/dtype sweeps
 (interpret mode executes the kernel bodies on CPU)."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import covariance as C
-from repro.core.types import AVG, FREQ, GPParams, Schema, make_snippets
-from repro.kernels.se_covariance.kernel import se_cov_pallas
+from repro.core.types import AVG, GPParams, Schema, make_snippets
 from repro.kernels.se_covariance.ops import se_cov_matrix
 from repro.kernels.se_covariance.ref import se_cov_matrix_ref
 from repro.kernels.range_mask_agg.ops import eval_partials_kernel, range_mask_agg

@@ -1,6 +1,5 @@
 """Launch-layer unit tests that don't require compiles: HLO collective parser,
 roofline math, cell list policy, mesh builders (shape only)."""
-import numpy as np
 import pytest
 
 from repro.launch import hlo_analysis as H

@@ -8,7 +8,6 @@ import pytest
 from repro import configs
 from repro.models import params as PM
 from repro.models import transformer as T
-from repro.models.common import ShardCtx
 from repro.training.optimizer import adamw
 from repro.training.train_loop import make_train_step
 

@@ -1,7 +1,6 @@
 """AqpService microbatcher: auto-flush threshold, ticket resolution, stats
 propagation, and bitwise parity of microbatched answers vs direct
 ``execute_many`` (previously untested beyond one smoke case)."""
-import numpy as np
 import pytest
 
 import repro.verdict as vd

@@ -31,7 +31,6 @@ from repro.core.engine import EngineConfig, VerdictEngine
 from repro.core.store import (
     LocalSynopsisStore,
     ShardedSynopsisStore,
-    agg_key,
     parse_state_key,
     state_key,
 )
@@ -282,6 +281,10 @@ def test_no_raw_synopsis_dict_access_outside_store():
             path = os.path.join(dirpath, fname)
             rel = os.path.relpath(path, src_root)
             if rel == os.path.join("core", "store.py"):
+                continue
+            if rel == os.path.join("analysis", "ast_rules.py"):
+                # the static checker's A001 rule polices exactly this
+                # access path, so it necessarily names the attribute
                 continue
             text = open(path).read()
             # `_synopses` as its own identifier (not load_/save_synopses),
