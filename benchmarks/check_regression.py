@@ -54,6 +54,13 @@ def current_metrics(improve_report: str = "", shard_report: str = "") -> dict:
 
         imp_rows, _ = improve_bench.bench(smoke=True)
         rows.update(dict(imp_rows))
+    # Workload-intelligence gate: the repeated-dashboard smoke must keep
+    # serving from the semantic answer cache (hit rate) and keep hits
+    # cheap (served-from-cache speedup) — the baseline holds the tentpole
+    # acceptance floors (0.5 / 10x), not machine-volatile measurements.
+    import cache_bench
+
+    rows.update(dict(cache_bench.bench(smoke=True)))
     # Fused-scan gate metrics: bitwise parity + BlockSpec roofline fraction
     # (both machine-portable; no wall-clock involved).
     import kernels_bench
@@ -116,6 +123,10 @@ def update(rows: dict) -> dict:
         # the once-streamed relation floor (un-fusing the mask collapses
         # this fraction of achievable HBM peak).
         "scan/bytes_per_sec_frac_of_peak": True,
+        # Semantic answer cache: repeated dashboards must keep hitting and
+        # hits must stay an order of magnitude cheaper than execution.
+        "intel/hit_rate": True,
+        "intel/served_from_cache_speedup": True,
         # Chaos hooks must be disarmed (zero-cost) during benchmark runs.
         "faults/hooks_inactive": True,
         # The static invariant checker (repro.analysis --strict) is clean:
@@ -123,12 +134,19 @@ def update(rows: dict) -> dict:
         # compile cache, f64 policy, access-path discipline.
         "analysis/violations": False,
     }
+    metrics = {
+        name: {"value": rows[name], "higher_is_better": hib}
+        for name, hib in gated.items()
+    }
+    # Pin the intel gates at the tentpole acceptance floors instead of the
+    # (much higher, machine-volatile) measured values — CI gates the
+    # contract, not this runner's speed.
+    for name, floor in (("intel/hit_rate", 0.5),
+                        ("intel/served_from_cache_speedup", 10.0)):
+        metrics[name]["value"] = min(metrics[name]["value"], floor)
     return {
         "tolerance": 0.25,
-        "metrics": {
-            name: {"value": rows[name], "higher_is_better": hib}
-            for name, hib in gated.items()
-        },
+        "metrics": metrics,
     }
 
 

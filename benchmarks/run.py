@@ -18,11 +18,13 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import (batch_bench, improve_bench, kernels_bench,
-                            paper_tables, roofline_report, shard_bench)
+    from benchmarks import (batch_bench, cache_bench, improve_bench,
+                            kernels_bench, paper_tables, roofline_report,
+                            shard_bench)
 
     suites = {
         "batch": batch_bench.run,
+        "cache": cache_bench.run,
         "improve": improve_bench.run,
         "shard": shard_bench.run,
         "table3": paper_tables.table3_generality,

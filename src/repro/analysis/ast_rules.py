@@ -24,6 +24,10 @@ A006  epsilon discipline: no local epsilon literal in the half-open band
       (1e-15, 1e-5] inside the kernels or the executor — the shared
       ``RANGE_EPS`` is the single source of truth (the pre-PR-6 parity
       drift was exactly a kernel-local ``1e-7`` vs the oracle's ``1e-12``).
+A007  determinism inside ``repro.intel``: no wall-clock and no RNG in the
+      workload-intelligence plane — cache keys and router features must be
+      pure functions of the plan IR and engine state, or keys stop
+      persisting across processes and route decisions stop replaying.
 """
 from __future__ import annotations
 
@@ -281,6 +285,60 @@ def check_kernel_determinism(
     return out
 
 
+# ------------------------------------------------------------------- A007
+
+
+def _in_intel(rel: str) -> bool:
+    return rel.startswith("intel/")
+
+
+def check_intel_determinism(
+    files: Sequence[ParsedFile],
+    scope: Optional[Callable[[str], bool]] = _in_intel,
+) -> List[Finding]:
+    """A004's discipline applied to the workload-intelligence plane.
+
+    Cache-key derivation (``QuerySignature``) and router features must be
+    pure functions of the plan IR and engine state: a wall-clock read makes
+    staleness decisions replay-dependent, an RNG draw makes two processes
+    derive different keys for the same query (and ``hash()`` randomization
+    is why keys go through blake2b, never ``hash()``).
+    """
+    out: List[Finding] = []
+    for pf in files:
+        if scope is not None and not scope(pf.rel):
+            continue
+        for node in ast.walk(pf.tree):
+            bad = None
+            if isinstance(node, ast.Import):
+                mods = [a.name.split(".")[0] for a in node.names]
+                hit = sorted(set(mods) & _CLOCK_RNG_MODULES)
+                if hit:
+                    bad = f"imports {', '.join(hit)}"
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                top = node.module.split(".")[0]
+                if top in _CLOCK_RNG_MODULES:
+                    bad = f"imports from {node.module}"
+                elif node.module == "jax" and any(
+                        a.name == "random" for a in node.names):
+                    bad = "imports jax.random"
+            elif isinstance(node, ast.Attribute) and node.attr == "random" \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id in _RNG_ATTR_BASES:
+                bad = f"uses {node.value.id}.random"
+            if bad:
+                out.append(Finding(
+                    "A007", ERROR, _loc(pf, node),
+                    f"intel module {bad} — wall-clock/RNG inside "
+                    "repro.intel breaks cache-key/router determinism",
+                    "cache keys and router features must be pure functions "
+                    "of the plan IR and engine state (generation counters, "
+                    "fill buckets); measure latency in benchmarks, never in "
+                    "the serving plane",
+                ))
+    return out
+
+
 # ------------------------------------------------------------------- A005
 
 
@@ -426,7 +484,7 @@ def check_epsilon_discipline(
 
 # ------------------------------------------------------------------- driver
 
-AST_RULES = ("A001", "A002", "A003", "A004", "A005", "A006")
+AST_RULES = ("A001", "A002", "A003", "A004", "A005", "A006", "A007")
 
 
 def run_ast_rules(
@@ -452,4 +510,6 @@ def run_ast_rules(
         ))
     if "A006" in rules:
         out.extend(check_epsilon_discipline(files))
+    if "A007" in rules:
+        out.extend(check_intel_determinism(files))
     return out

@@ -109,17 +109,34 @@ class BatchExecutor:
         max_batches = min(
             max_batches or eng.batches.n_batches, eng.batches.n_batches
         )
-        wp = plan_workload(eng, queries)
+        results: List[Optional[QueryResult]] = [None] * len(queries)
+        # Workload-intelligence pre-screen (repro.intel): queries served
+        # from the semantic answer cache drop out of the fused batch BEFORE
+        # planning/snippet dedup — they cost no probe, no scan, no improve
+        # and no record. Miss queries flow through the unchanged lifecycle,
+        # so their answers are bitwise-identical to a cache-disabled engine.
+        intel = getattr(eng, "intel", None)
+        live_idx = list(range(len(queries)))
+        if intel is not None:
+            live_idx = []
+            for i, q in enumerate(queries):
+                served = intel.lookup(
+                    eng, q, target_rel_error=target_rel_error,
+                    stop_delta=stop_delta, max_batches=max_batches)
+                if served is not None:
+                    results[i] = served
+                else:
+                    live_idx.append(i)
+        wp = plan_workload(eng, [queries[i] for i in live_idx])
         self.stats = wp.stats
         phys_main = PhysicalPlan(eng.batches, wp.fused, self._eval,
                                  stats=wp.stats)
         phys_raw = PhysicalPlan(eng.batches, wp.fused_raw, plain_eval,
                                 stats=wp.stats)
-        results: List[Optional[QueryResult]] = [None] * len(queries)
         for lp in wp.logical:
             deadline = (None if deadline_s is None
                         else time.monotonic() + float(deadline_s))
-            results[lp.index] = replay_query(
+            results[live_idx[lp.index]] = replay_query(
                 eng, lp, phys_main if lp.supported else phys_raw,
                 target_rel_error=target_rel_error, max_batches=max_batches,
                 stop_delta=stop_delta, deadline=deadline,

@@ -99,7 +99,13 @@ def predicates_to_arrays(schema: Schema, predicates) -> Tuple[dict, dict]:
             lo, hi = num_ranges.get(p.dim, (schema.num_lo[p.dim], schema.num_hi[p.dim]))
             num_ranges[p.dim] = (max(lo, p.lo), min(hi, p.hi))
         elif isinstance(p, NumEq):
-            num_ranges[p.dim] = (p.value, p.value)
+            # Intersect like NumRange does: overwriting here made the
+            # canonical form order-dependent ([NumRange, NumEq] vs
+            # [NumEq, NumRange] produced different boxes for the same
+            # conjunction), which broke snippet dedup and cache keys for
+            # commutative spellings of one query.
+            lo, hi = num_ranges.get(p.dim, (schema.num_lo[p.dim], schema.num_hi[p.dim]))
+            num_ranges[p.dim] = (max(lo, p.value), min(hi, p.value))
         elif isinstance(p, CatIn):
             prev = cat_sets.get(p.dim)
             vals = set(p.values) if prev is None else set(prev) & set(p.values)

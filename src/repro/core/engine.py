@@ -83,10 +83,17 @@ class VerdictEngine:
         config: Optional[EngineConfig] = None,
         store=None,
         scan: Optional[ScanPlacement] = None,
+        intel=None,
     ):
         self.relation = relation
         self.schema: Schema = relation.schema
         self.config = config or EngineConfig()
+        # Optional workload-intelligence plane (repro.intel.WorkloadIntel):
+        # semantic answer cache + serve-path router. None (the default)
+        # keeps every path bit-for-bit the historical engine; the plan
+        # lifecycle and the batch executor consult it via getattr, so the
+        # core never imports the intel package.
+        self.intel = intel
         # The scan plane's placement seam (repro.aqp.executor.ScanPlacement):
         # every block evaluation routes through it, mirroring how all
         # learned state routes through `store`. Local by default;
@@ -294,13 +301,28 @@ class VerdictEngine:
     def load_synopses_state_dict(self, state: Dict[str, dict]):
         """Restore a store snapshot (accepts legacy ``"<agg>_<measure>"``
         keys from pre-store checkpoints; placement is re-derived by the
-        current store's policy, so the snapshot re-places onto any mesh)."""
+        current store's policy, so the snapshot re-places onto any mesh).
+
+        A reserved ``"intel"`` payload (present when the saving engine had
+        a workload-intelligence plane) restores the answer cache + learned
+        router state when this engine has one too — AFTER the store, so
+        cache-entry generations re-license against the restored synopses.
+        """
+        state = dict(state)
+        intel_state = state.pop("intel", None)
         self.store.load_state_dict(state)
+        if self.intel is not None and intel_state is not None:
+            self.intel.load_state_dict(intel_state, self.store)
 
     def save_synopses(self, manager, step: int):
-        """Checkpoint the learned synopses through a ``CheckpointManager``."""
-        manager.save(step, self.store.state_dict(),
-                     extra={"kind": "verdict-synopses"})
+        """Checkpoint the learned synopses (plus, when a workload-
+        intelligence plane is attached, its answer cache and learned router
+        state under the reserved ``"intel"`` key) through a
+        ``CheckpointManager`` — one payload, one CRC-verified commit."""
+        payload = self.store.state_dict()
+        if self.intel is not None:
+            payload["intel"] = self.intel.state_dict(self.store)
+        manager.save(step, payload, extra={"kind": "verdict-synopses"})
 
     def load_synopses(self, manager, step: Optional[int] = None):
         """Restore synopses from a ``CheckpointManager`` checkpoint.
@@ -308,10 +330,11 @@ class VerdictEngine:
         This is what makes the engine smarter across process restarts: a new
         process pays zero queries to recover everything past sessions learned
         — including re-placing a sharded checkpoint onto whatever devices
-        this process' store spans.
+        this process' store spans, and (when both sides carry a workload-
+        intelligence plane) the semantic answer cache and router state.
         """
         state, extra = manager.restore_blind(step)
-        self.store.load_state_dict(state)
+        self.load_synopses_state_dict(state)
         return extra
 
     # -------------------------------------------------------------- batched

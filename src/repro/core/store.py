@@ -156,6 +156,19 @@ class SynopsisStore:
     def __iter__(self) -> Iterator[AggKey]:
         return iter(self._synopses)
 
+    def generation(self, key: AggKey) -> int:
+        """Monotone state generation of ``key``'s synopsis (0 if absent).
+
+        The cache-staleness primitive (``repro.intel``): a cached answer
+        records the generations of every aggregate key it touched; any
+        mismatch on lookup marks it stale. Bumps happen synchronously at
+        every serving-visible state transition (ingest enqueue, quarantine,
+        heal, refit, append, restore), so staleness is deterministic even
+        with asynchronous ingest.
+        """
+        syn = self._synopses.get(key)
+        return syn.generation if syn is not None else 0
+
     # ---------------------------------------------------------- placement
     def shard_index(self, key: AggKey) -> int:
         """Deterministic shard assignment for ``key`` (0 when unsharded).

@@ -312,6 +312,14 @@ class Synopsis:
         self.min_fill_bucket = int(min_fill_bucket)
         self.min_q_bucket = int(min_q_bucket)
         self.name: Optional[str] = None  # store-assigned state_key (fault key)
+        # Monotone state-generation counter for cache invalidation
+        # (repro.intel): bumped SYNCHRONOUSLY on the caller thread at every
+        # state transition that can change served answers — add() at enqueue
+        # time (before the async apply, so staleness is deterministic even
+        # under async ingest), quarantine, heal, refit, append adjustment and
+        # state restore. A cached answer records the generations it was
+        # derived under; any mismatch marks it stale.
+        self.generation = 0
         self._shed_count = 0
         self._restored_high_water = 0
         self._qlock = threading.Lock()
@@ -396,6 +404,12 @@ class Synopsis:
         drain the backlog, then apply this batch inline — which bounds host
         memory and keeps FIFO order (determinism) intact.
         """
+        # Bump BEFORE the (possibly async) apply: callers observe the new
+        # generation at enqueue time, so an answer cached right after this
+        # add() records the post-ingest generation deterministically, and a
+        # failing apply (→ quarantine) can never serve a pre-failure cached
+        # answer as fresh — the entry was already staleness-bumped here.
+        self.generation += 1
         item = (
             np.array(np.asarray(snippets.lo), dtype=np.float64),
             np.array(np.asarray(snippets.hi), dtype=np.float64),
@@ -439,6 +453,7 @@ class Synopsis:
             if self._quarantine_exc is None:
                 self._quarantine_exc = exc
                 self._quarantine_count += 1
+                self.generation += 1  # degraded: cached answers go stale
             if item is not None:
                 self._unapplied.append(item)
 
@@ -497,6 +512,7 @@ class Synopsis:
                     self._quarantine_count += 1
                     self._unapplied = parked[i:] + self._unapplied
                 return False
+        self.generation += 1  # healed state ≠ the state cached answers saw
         return True
 
     def drain(self):
@@ -707,6 +723,7 @@ class Synopsis:
             batch, theta, beta2, self.schema, steps=steps, lr=lr, learn_sigma=learn_sigma
         )
         self.rebuild()
+        self.generation += 1  # relearned params change improved answers
         return self.params
 
     def rebuild(self):
@@ -820,6 +837,7 @@ class Synopsis:
         self._theta[rows] = np.asarray(theta)
         self._beta2[rows] = np.asarray(beta2)
         self.rebuild()
+        self.generation += 1  # stored answers rescaled for appended data
 
     # ------------------------------------------------------------ persistence
     def state_dict(self):
@@ -878,3 +896,4 @@ class Synopsis:
         }
         self._clock = int(self._stamp[:n].max()) if n else 0
         self.rebuild()
+        self.generation += 1  # restored state ≠ whatever answers were cached

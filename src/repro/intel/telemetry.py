@@ -1,0 +1,71 @@
+"""Workload-intelligence counters (`Session.stats()["intel"]`).
+
+One mutable counter block shared by the semantic answer cache
+(``repro.intel.cache``) and the serve-path router (``repro.intel.router``):
+every lookup resolves to exactly one of hit-exact / hit-subsumed / miss,
+with the refusal sub-reasons (stale / quarantined / budget / uncacheable)
+counted alongside so operators can see WHY a repeat query re-scanned.
+Route decisions (cache / improve / scan) accumulate per route.
+
+Determinism note (analysis rule A007): these are pure event counters —
+no wall-clock, no RNG. Latency-flavoured metrics live in the benchmarks
+(``benchmarks/cache_bench.py``), never in serve-path state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class IntelTelemetry:
+    """Hit/miss/staleness/route counters for one ``WorkloadIntel`` plane.
+
+    ``lookups`` counts every cache consult; a lookup lands in exactly one of
+    ``hits_exact`` / ``hits_subsumed`` / ``misses``. The ``*_refused``
+    counters sub-classify misses by refusal reason (one miss may carry
+    several: e.g. an entry both stale and quarantined). ``stale_served``
+    counts hits served from a staleness-bumped entry whose recorded CI still
+    met the caller's explicit error budget (error-budget-licensed serving).
+    """
+
+    lookups: int = 0
+    hits_exact: int = 0
+    hits_subsumed: int = 0
+    misses: int = 0
+    stale_served: int = 0
+    stale_refused: int = 0
+    quarantine_refused: int = 0
+    budget_refused: int = 0
+    uncacheable: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    routes: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"cache": 0, "improve": 0, "scan": 0})
+
+    @property
+    def hits(self) -> int:
+        return self.hits_exact + self.hits_subsumed
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.lookups, 1)
+
+    def record_route(self, route: str):
+        self.routes[route] = self.routes.get(route, 0) + 1
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hits"] = self.hits
+        d["hit_rate"] = self.hit_rate
+        return d
+
+    def state_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def load_state_dict(self, state: dict):
+        for f in dataclasses.fields(self):
+            if f.name in state:
+                val = state[f.name]
+                setattr(self, f.name,
+                        dict(val) if f.name == "routes" else int(val))

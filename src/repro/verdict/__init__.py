@@ -19,6 +19,7 @@ from repro.core.store import (
     ShardedSynopsisStore,
     SynopsisStore,
 )
+from repro.intel import IntelConfig, WorkloadIntel
 from repro.verdict.answer import Cell, FailedAnswer, PlanReport, QueryAnswer
 from repro.verdict.query import (
     QueryBuilder,
@@ -35,6 +36,7 @@ __all__ = [
     "EngineConfig",
     "ErrorBudget",
     "FailedAnswer",
+    "IntelConfig",
     "LocalSynopsisStore",
     "PlanReport",
     "QueryAnswer",
@@ -42,6 +44,7 @@ __all__ = [
     "Session",
     "ShardedSynopsisStore",
     "SynopsisStore",
+    "WorkloadIntel",
     "any_of",
     "between",
     "connect",

@@ -44,6 +44,7 @@ from repro.core.store import (
 )
 from repro.core.types import bucket_size
 from repro.ft import faults
+from repro.intel import IntelConfig, WorkloadIntel
 from repro.verdict.answer import PlanReport, QueryAnswer
 from repro.verdict.query import QueryBuilder
 
@@ -74,7 +75,7 @@ class ErrorBudget:
 
 def connect(relation: Relation,
             config: Optional[EngineConfig] = None,
-            mesh=None) -> "Session":
+            mesh=None, cache=None) -> "Session":
     """Open a Session over a relation (the driver-level entry point).
 
     ``mesh``: optional JAX mesh. One mesh shards both planes — the fused
@@ -83,8 +84,14 @@ def connect(relation: Relation,
     non-issue), and the learned state is placed per aggregate key by a
     ``ShardedSynopsisStore`` over the same devices. Without a mesh both
     stay on the default device.
+
+    ``cache``: opt-in workload intelligence (``repro.intel``) — the
+    semantic answer cache + learned serve-path router. ``True`` attaches a
+    default ``WorkloadIntel``; an ``IntelConfig`` or a pre-built
+    ``WorkloadIntel`` customizes it; ``None``/``False`` (default) keeps
+    every path bit-for-bit the historical engine.
     """
-    return Session(relation, config, mesh=mesh)
+    return Session(relation, config, mesh=mesh, cache=cache)
 
 
 class Session:
@@ -97,13 +104,22 @@ class Session:
     """
 
     def __init__(self, relation: Relation,
-                 config: Optional[EngineConfig] = None, mesh=None):
+                 config: Optional[EngineConfig] = None, mesh=None,
+                 cache=None):
         store = None
         if mesh is not None:
             store = (lambda schema, cfg:
                      ShardedSynopsisStore(schema, cfg, mesh=mesh))
+        intel = None
+        if cache:  # True | IntelConfig | WorkloadIntel (None/False: off)
+            if isinstance(cache, WorkloadIntel):
+                intel = cache
+            elif isinstance(cache, IntelConfig):
+                intel = WorkloadIntel(cache)
+            else:
+                intel = WorkloadIntel()
         self.engine = VerdictEngine(relation, config, store=store,
-                                    scan=scan_placement(mesh))
+                                    scan=scan_placement(mesh), intel=intel)
         # The executor picks up the engine's ScanPlacement, so every path —
         # execute/execute_many/stream/serve — scans through the same seam.
         self._executor = BatchExecutor(self.engine)
@@ -126,6 +142,12 @@ class Session:
     def last_stats(self) -> BatchStats:
         """Fusion accounting of the most recent execute/execute_many call."""
         return self._executor.stats
+
+    @property
+    def intel(self) -> Optional[WorkloadIntel]:
+        """The workload-intelligence plane (``connect(cache=...)``), or
+        None when the session runs the historical cache-less paths."""
+        return self.engine.intel
 
     # --------------------------------------------------------------- queries
     def query(self) -> QueryBuilder:
@@ -156,22 +178,36 @@ class Session:
         return [QueryAnswer.from_result(r) for r in results]
 
     # --------------------------------------------------------------- explain
-    def explain(self, q: QueryLike) -> PlanReport:
+    def explain(self, q: QueryLike,
+                budget: Optional[ErrorBudget] = None) -> PlanReport:
         """Plan a query without scanning past the group-discovery probe.
 
         Reports, per aggregate-function key, the predicted serve tiles AND
         the store's shard assignment — for keys that do not exist yet this
         is where the state *would* be placed (placement is a pure function
-        of the key, never of arrival order).
+        of the key, never of arrival order). With workload intelligence
+        attached (``connect(cache=...)``), also reports the answer-cache
+        status (exact/subsumed/miss/uncacheable) and the route the serve
+        router would pick under ``budget`` — read-only: explaining never
+        moves LRU state, counters, or probe streaks.
         """
         eng = self.engine
+        budget = budget or ErrorBudget()
         scan = self._executor.placement.describe()
         evaluator = self._executor.placement.evaluator_for(eng._eval_fn)
         wp = plan_workload(eng, [self._lower(q)])
         lp = wp.logical[0]
+        cache_status, route = None, None
+        if eng.intel is not None:
+            cache_status, route = eng.intel.peek(
+                eng, self._lower(q),
+                target_rel_error=budget.target_rel_error,
+                stop_delta=budget.delta,
+                max_batches=budget.max_batches, lp=lp)
         if lp.plan is None:
             return PlanReport(True, None, 0, 0, 0, 0, 0, 1.0, {}, {}, {},
-                              scan_placement=scan, scan_evaluator=evaluator)
+                              scan_placement=scan, scan_evaluator=evaluator,
+                              cache=cache_status, route=route)
         n_total = lp.plan.snippets.n
         n_unique = wp.stats.n_snippets_fused
         q_buckets, fill_buckets, placement, quarantined = {}, {}, {}, {}
@@ -197,6 +233,8 @@ class Session:
             scan_placement=scan,
             scan_evaluator=evaluator,
             quarantined=quarantined,
+            cache=cache_status,
+            route=route,
         )
 
     # ---------------------------------------------------------------- stream
@@ -214,6 +252,16 @@ class Session:
         """
         eng = self.engine
         budget = budget or ErrorBudget()
+        if eng.intel is not None:
+            served = eng.intel.lookup(
+                eng, self._lower(q),
+                target_rel_error=budget.target_rel_error,
+                stop_delta=budget.delta, max_batches=budget.max_batches)
+            if served is not None:
+                # Cache hit: the stream collapses to its (final) answer —
+                # exactly what execute() under the same budget returns.
+                yield QueryAnswer.from_result(served, final=True)
+                return
         wp = plan_workload(eng, [self._lower(q)])
         lp = wp.logical[0]
         phys = PhysicalPlan(
@@ -259,6 +307,8 @@ class Session:
         ``health``: quarantined synopses (``{state_key: reason}`` — those
         keys serve raw sample estimates until ``heal()``) and, during a
         chaos run, the active fault plan's per-point call/fire counters.
+        ``intel``: the workload-intelligence plane's hit/miss/subsumption/
+        staleness/route counters (``{"enabled": False}`` without one).
         """
         return {
             "store": self.engine.store.stats(),
@@ -268,6 +318,9 @@ class Session:
                 "quarantined": self.engine.store.quarantined(),
                 "faults": faults.stats(),
             },
+            "intel": (self.engine.intel.stats()
+                      if self.engine.intel is not None
+                      else {"enabled": False}),
         }
 
     def heal(self, manager=None, step: Optional[int] = None) -> dict:

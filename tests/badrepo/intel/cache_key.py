@@ -1,0 +1,20 @@
+"""A007 fixture: wall-clock + RNG inside the workload-intelligence plane.
+
+Every line here is a determinism sin the real ``repro.intel`` must never
+commit — a cache key salted with the clock stops persisting across
+processes, and an RNG-jittered router feature makes route decisions
+unreplayable.
+"""
+import time
+
+import numpy as np
+
+
+def cache_key(sig_json: str) -> str:
+    # BAD: the key changes every call — the cache can never hit.
+    return f"{sig_json}:{time.time()}"
+
+
+def router_feature(fill_bucket: int) -> float:
+    # BAD: jittered features make route decisions unreplayable.
+    return fill_bucket + np.random.uniform(0.0, 1.0)

@@ -320,6 +320,17 @@ def test_a004_clock_and_rng_in_kernel_flagged(bad_files):
     assert outside == []
 
 
+def test_a007_clock_and_rng_in_intel_flagged(bad_files):
+    found = ast_rules.check_intel_determinism(bad_files)
+    assert _rules(found) == {"A007"}
+    msgs = " ".join(f.message for f in found)
+    assert "time" in msgs and "np.random" in msgs
+    # scope: the rule only polices the workload-intelligence plane — the
+    # kernels fixture's identical sins belong to A004, not A007
+    outside = [f for f in found if not f.location.startswith("intel/")]
+    assert outside == []
+
+
 def test_a005_orphan_module_flagged():
     found = ast_rules.check_dead_code(BADREPO, importer_roots=())
     orphans = [f for f in found if f.location == "orphan.py"]
