@@ -61,6 +61,13 @@ def current_metrics(improve_report: str = "", shard_report: str = "") -> dict:
     import cache_bench
 
     rows.update(dict(cache_bench.bench(smoke=True)))
+    # Multi-tenant serving-front gate: under concurrent heavy-tail load,
+    # every ticket resolves (none lost/hung), rate-limit refusals stay typed
+    # Rejection values, and front answers stay bitwise-equal to a direct
+    # Session.execute on an identical engine.
+    import serving_bench
+
+    rows.update(dict(serving_bench.bench(smoke=True)))
     # Fused-scan gate metrics: bitwise parity + BlockSpec roofline fraction
     # (both machine-portable; no wall-clock involved).
     import kernels_bench
@@ -127,6 +134,12 @@ def update(rows: dict) -> dict:
         # hits must stay an order of magnitude cheaper than execution.
         "intel/hit_rate": True,
         "intel/served_from_cache_speedup": True,
+        # Serving front under concurrent multi-tenant load: exactly-once
+        # ticket resolution, typed (never raised) admission refusals, and
+        # bitwise miss-path parity with a direct session.
+        "serving/all_tickets_resolved": True,
+        "serving/rate_limit_typed": True,
+        "serving/miss_path_bitwise_equal": True,
         # Chaos hooks must be disarmed (zero-cost) during benchmark runs.
         "faults/hooks_inactive": True,
         # The static invariant checker (repro.analysis --strict) is clean:

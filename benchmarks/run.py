@@ -20,11 +20,12 @@ def main() -> None:
 
     from benchmarks import (batch_bench, cache_bench, improve_bench,
                             kernels_bench, paper_tables, roofline_report,
-                            shard_bench)
+                            serving_bench, shard_bench)
 
     suites = {
         "batch": batch_bench.run,
         "cache": cache_bench.run,
+        "serving": serving_bench.run,
         "improve": improve_bench.run,
         "shard": shard_bench.run,
         "table3": paper_tables.table3_generality,

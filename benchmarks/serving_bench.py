@@ -1,0 +1,179 @@
+"""Multi-tenant serving-front load benchmark (the PR-10 acceptance gate).
+
+Drives a ``ServingFront`` with N concurrent tenants (mixed shared/isolated
+isolation) over a heavy-tail (zipf-skewed) query mix, one client thread per
+tenant, and checks the three contracts the front must keep under load:
+
+1. ``serving/all_tickets_resolved``: every issued request resolves to
+   exactly one answer-ladder value — no lost, hung, or double-resolved
+   tickets, no exception escaping a client thread.
+2. ``serving/rate_limit_typed``: an over-budget tenant's refusals are all
+   typed ``Rejection`` values (never exceptions), and a throttled tenant
+   actually gets refused (the limiter is live, not decorative).
+3. ``serving/miss_path_bitwise_equal``: an answer served through the full
+   front stack (admission -> microbatch service -> fused executor) is
+   bitwise-identical to a direct ``Session.execute`` on an identical
+   engine — the front adds tenancy and admission, never numerics.
+
+Wall-clock lives HERE and in the front's transport layer, never in the
+admission/metrics decision modules (analysis rule A008).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import threading
+import time
+
+import numpy as np
+
+import repro.verdict as vd
+from repro.aqp import workload as W
+from repro.serving.front import Rejection, ServingFront, TenantSpec
+
+
+def _zipf_draws(rng, pool_size: int, n: int) -> np.ndarray:
+    ranks = np.arange(1, pool_size + 1, dtype=np.float64)
+    probs = (1.0 / ranks) / (1.0 / ranks).sum()
+    return rng.choice(pool_size, size=n, p=probs)
+
+
+def bench(smoke=False, n_tenants=8, n_rows=20_000, n_batches=4, pool=10,
+          requests_per_tenant=24, seed=0):
+    """Returns [(metric_name, value)] rows (benchmarks/run.py convention)."""
+    if smoke:
+        n_rows, n_batches, pool, requests_per_tenant = 2_000, 2, 5, 8
+    assert n_tenants >= 8, "the acceptance gate requires >= 8 tenants"
+    rel = W.make_relation(seed=seed, n_rows=n_rows, n_num=2, cat_sizes=(6,),
+                          n_measures=1, lengthscale=0.4, noise=0.2)
+    cfg = vd.EngineConfig(sample_rate=0.15, n_batches=n_batches,
+                          capacity=512, seed=seed)
+
+    front = ServingFront(rel, cfg)
+    specs = []
+    for i in range(n_tenants):
+        # Every third tenant isolated (private engine, parallel scans); the
+        # rest share one learned-state namespace. Tenant 0 is throttled hard
+        # enough that the token bucket MUST refuse most of its burst.
+        specs.append(TenantSpec(
+            f"t{i}",
+            isolation="isolated" if i % 3 == 2 else "shared",
+            rate=(0.05 if i == 0 else 500.0),
+            burst=(2 if i == 0 else 64),
+            max_pending=64,
+        ))
+        front.add_tenant(specs[-1])
+
+    # Per-tenant heavy-tail workloads: distinct pools so shared tenants
+    # still overlap only through the shared store, plus zipf-skewed draws so
+    # repeats (and prescreen hits) occur naturally.
+    rng = np.random.default_rng(seed)
+    pools = {
+        s.name: W.make_workload(100 + i, rel.schema, pool,
+                                agg_kinds=("AVG", "COUNT", "SUM"),
+                                cat_pred_prob=0.3)
+        for i, s in enumerate(specs)
+    }
+    plans = {s.name: _zipf_draws(rng, pool, requests_per_tenant)
+             for s in specs}
+
+    outcomes = {s.name: [] for s in specs}
+    latencies = []
+    errors = []
+
+    def client(name: str):
+        try:
+            for i in plans[name]:
+                t0 = time.perf_counter()
+                ans = front.execute(name, pools[name][int(i)])
+                latencies.append(time.perf_counter() - t0)
+                outcomes[name].append(ans)
+        except BaseException as e:  # noqa: BLE001 — the gate counts these
+            errors.append((name, repr(e)))
+
+    threads = [threading.Thread(target=client, args=(s.name,), daemon=True)
+               for s in specs]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=600.0)
+    wall = time.perf_counter() - t0
+    hung = [t for t in threads if t.is_alive()]
+
+    issued = n_tenants * requests_per_tenant
+    resolved = sum(len(v) for v in outcomes.values())
+    all_resolved = float(not errors and not hung and resolved == issued
+                         and all(a is not None
+                                 for v in outcomes.values() for a in v))
+
+    rejections = [a for v in outcomes.values() for a in v
+                  if getattr(a, "rejected", False)]
+    throttled_rejections = [a for a in outcomes["t0"]
+                            if getattr(a, "rejected", False)]
+    rate_limit_typed = float(
+        bool(throttled_rejections)
+        and all(isinstance(a, Rejection) for a in rejections)
+        and all(a.reason in ("rate_limit", "queue_full") for a in rejections))
+
+    # ------------------------------------------------- miss-path parity gate
+    # A FRESH isolated tenant vs a direct Session on an identical engine:
+    # same config, same queries, cold stores on both sides — the front's
+    # answer must be bitwise-identical, cell for cell.
+    parity_qs = W.make_workload(999, rel.schema, 4,
+                                agg_kinds=("AVG", "COUNT", "SUM"))
+    front.add_tenant(TenantSpec("parity", isolation="isolated", rate=0.0))
+    direct = vd.connect(rel, cfg)
+    bitwise = True
+    for q in parity_qs:
+        a = front.execute("parity", q)
+        b = direct.execute(q)
+        bitwise &= (not getattr(a, "failed", True)
+                    and [c.to_dict() for c in a.cells]
+                    == [c.to_dict() for c in b.cells])
+
+    stats = front.stats()
+    prescreens = sum(t["service"]["prescreened"]
+                     for t in stats["tenants"].values())
+    return [
+        ("serving/all_tickets_resolved", all_resolved),
+        ("serving/rate_limit_typed", rate_limit_typed),
+        ("serving/miss_path_bitwise_equal", float(bitwise)),
+        ("serving/requests", float(issued)),
+        ("serving/rejections", float(len(rejections))),
+        ("serving/prescreen_hits", float(prescreens)),
+        ("serving/throughput_rps", (resolved - len(rejections))
+         / max(wall, 1e-9)),
+        ("serving/latency_ms_p50",
+         statistics.median(latencies) * 1e3 if latencies else 0.0),
+    ]
+
+
+def run():
+    """Entry point for ``benchmarks.run`` suite registration."""
+    return bench()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, CI smoke: checks the gates end-to-end")
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--requests", type=int, default=24)
+    args = ap.parse_args()
+    rows = bench(smoke=args.smoke, n_tenants=args.tenants, n_rows=args.rows,
+                 requests_per_tenant=args.requests)
+    for name, val in rows:
+        print(f"{name},{val:.4g}")
+    gates = dict(rows)
+    for g in ("serving/all_tickets_resolved", "serving/rate_limit_typed",
+              "serving/miss_path_bitwise_equal"):
+        if gates[g] != 1.0:
+            raise SystemExit(f"serving gate failed: {g} = {gates[g]}")
+
+
+if __name__ == "__main__":
+    main()

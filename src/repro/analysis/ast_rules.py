@@ -28,6 +28,10 @@ A007  determinism inside ``repro.intel``: no wall-clock and no RNG in the
       workload-intelligence plane — cache keys and router features must be
       pure functions of the plan IR and engine state, or keys stop
       persisting across processes and route decisions stop replaying.
+A008  clock-free serving-front decision modules: admission control and
+      metrics bucketing (``serving/front/{admission,metrics}.py``) take
+      timestamps/durations as arguments — the transport layer owns the
+      clock — so admission decisions are seedable and replay exactly.
 """
 from __future__ import annotations
 
@@ -237,10 +241,37 @@ def check_fault_seams(
     return out
 
 
-# ------------------------------------------------------------------- A004
+# ----------------------------------------------------- A004 / A007 / A008
 
 _CLOCK_RNG_MODULES = {"time", "random", "secrets", "datetime"}
 _RNG_ATTR_BASES = {"np", "numpy", "jax"}
+
+
+def _clock_rng_uses(tree: ast.AST):
+    """Yield ``(node, description)`` for every wall-clock/RNG use: imports
+    of the clock/RNG stdlib modules, ``jax.random`` imports, and
+    ``np/numpy/jax .random`` attribute access. The shared detector behind
+    the determinism rules (A004 kernels, A007 intel, A008 serving front)."""
+    for node in ast.walk(tree):
+        bad = None
+        if isinstance(node, ast.Import):
+            mods = [a.name.split(".")[0] for a in node.names]
+            hit = sorted(set(mods) & _CLOCK_RNG_MODULES)
+            if hit:
+                bad = f"imports {', '.join(hit)}"
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            top = node.module.split(".")[0]
+            if top in _CLOCK_RNG_MODULES:
+                bad = f"imports from {node.module}"
+            elif node.module == "jax" and any(
+                    a.name == "random" for a in node.names):
+                bad = "imports jax.random"
+        elif isinstance(node, ast.Attribute) and node.attr == "random" \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id in _RNG_ATTR_BASES:
+            bad = f"uses {node.value.id}.random"
+        if bad:
+            yield node, bad
 
 
 def _in_kernels(rel: str) -> bool:
@@ -255,37 +286,16 @@ def check_kernel_determinism(
     for pf in files:
         if scope is not None and not scope(pf.rel):
             continue
-        for node in ast.walk(pf.tree):
-            bad = None
-            if isinstance(node, ast.Import):
-                mods = [a.name.split(".")[0] for a in node.names]
-                hit = sorted(set(mods) & _CLOCK_RNG_MODULES)
-                if hit:
-                    bad = f"imports {', '.join(hit)}"
-            elif isinstance(node, ast.ImportFrom) and node.module:
-                top = node.module.split(".")[0]
-                if top in _CLOCK_RNG_MODULES:
-                    bad = f"imports from {node.module}"
-                elif node.module == "jax" and any(
-                        a.name == "random" for a in node.names):
-                    bad = "imports jax.random"
-            elif isinstance(node, ast.Attribute) and node.attr == "random" \
-                    and isinstance(node.value, ast.Name) \
-                    and node.value.id in _RNG_ATTR_BASES:
-                bad = f"uses {node.value.id}.random"
-            if bad:
-                out.append(Finding(
-                    "A004", ERROR, _loc(pf, node),
-                    f"kernel module {bad} — wall-clock/RNG inside "
-                    "repro.kernels breaks determinism",
-                    "kernel outputs must be pure functions of their "
-                    "operands (bitwise parity depends on it); thread keys/"
-                    "timestamps in from the caller if truly needed",
-                ))
+        for node, bad in _clock_rng_uses(pf.tree):
+            out.append(Finding(
+                "A004", ERROR, _loc(pf, node),
+                f"kernel module {bad} — wall-clock/RNG inside "
+                "repro.kernels breaks determinism",
+                "kernel outputs must be pure functions of their "
+                "operands (bitwise parity depends on it); thread keys/"
+                "timestamps in from the caller if truly needed",
+            ))
     return out
-
-
-# ------------------------------------------------------------------- A007
 
 
 def _in_intel(rel: str) -> bool:
@@ -308,34 +318,56 @@ def check_intel_determinism(
     for pf in files:
         if scope is not None and not scope(pf.rel):
             continue
-        for node in ast.walk(pf.tree):
-            bad = None
-            if isinstance(node, ast.Import):
-                mods = [a.name.split(".")[0] for a in node.names]
-                hit = sorted(set(mods) & _CLOCK_RNG_MODULES)
-                if hit:
-                    bad = f"imports {', '.join(hit)}"
-            elif isinstance(node, ast.ImportFrom) and node.module:
-                top = node.module.split(".")[0]
-                if top in _CLOCK_RNG_MODULES:
-                    bad = f"imports from {node.module}"
-                elif node.module == "jax" and any(
-                        a.name == "random" for a in node.names):
-                    bad = "imports jax.random"
-            elif isinstance(node, ast.Attribute) and node.attr == "random" \
-                    and isinstance(node.value, ast.Name) \
-                    and node.value.id in _RNG_ATTR_BASES:
-                bad = f"uses {node.value.id}.random"
-            if bad:
-                out.append(Finding(
-                    "A007", ERROR, _loc(pf, node),
-                    f"intel module {bad} — wall-clock/RNG inside "
-                    "repro.intel breaks cache-key/router determinism",
-                    "cache keys and router features must be pure functions "
-                    "of the plan IR and engine state (generation counters, "
-                    "fill buckets); measure latency in benchmarks, never in "
-                    "the serving plane",
-                ))
+        for node, bad in _clock_rng_uses(pf.tree):
+            out.append(Finding(
+                "A007", ERROR, _loc(pf, node),
+                f"intel module {bad} — wall-clock/RNG inside "
+                "repro.intel breaks cache-key/router determinism",
+                "cache keys and router features must be pure functions "
+                "of the plan IR and engine state (generation counters, "
+                "fill buckets); measure latency in benchmarks, never in "
+                "the serving plane",
+            ))
+    return out
+
+
+# A008: clock-free serving-front decision modules. The transport/composition
+# layer (front.py, http.py) legitimately measures time; the DECISION modules
+# (admission, metrics bucketing) must stay pure functions of injected
+# timestamps so admission traces replay deterministically.
+FRONT_DECISION_MODULES = (
+    "serving/front/admission.py",
+    "serving/front/metrics.py",
+)
+
+
+def _in_front_decisions(rel: str) -> bool:
+    return rel in FRONT_DECISION_MODULES
+
+
+def check_front_determinism(
+    files: Sequence[ParsedFile],
+    scope: Optional[Callable[[str], bool]] = _in_front_decisions,
+) -> List[Finding]:
+    """The determinism discipline applied to the serving front's decision
+    modules: admission (token bucket, queue bound) and metrics (latency
+    bucketing) take ``now``/durations as ARGUMENTS — a direct clock read or
+    RNG draw there makes admission decisions unreplayable and rate-limit
+    tests flaky. The transport layer owns the clock and injects it.
+    """
+    out: List[Finding] = []
+    for pf in files:
+        if scope is not None and not scope(pf.rel):
+            continue
+        for node, bad in _clock_rng_uses(pf.tree):
+            out.append(Finding(
+                "A008", ERROR, _loc(pf, node),
+                f"serving-front decision module {bad} — admission/metrics "
+                "must be pure functions of injected timestamps",
+                "take `now` (or the duration) as an argument and let the "
+                "transport layer (front.py/http.py) read the clock; "
+                "seedable decisions are what make admission traces replay",
+            ))
     return out
 
 
@@ -484,7 +516,7 @@ def check_epsilon_discipline(
 
 # ------------------------------------------------------------------- driver
 
-AST_RULES = ("A001", "A002", "A003", "A004", "A005", "A006", "A007")
+AST_RULES = ("A001", "A002", "A003", "A004", "A005", "A006", "A007", "A008")
 
 
 def run_ast_rules(
@@ -512,4 +544,6 @@ def run_ast_rules(
         out.extend(check_epsilon_discipline(files))
     if "A007" in rules:
         out.extend(check_intel_determinism(files))
+    if "A008" in rules:
+        out.extend(check_front_determinism(files))
     return out

@@ -98,13 +98,15 @@ class BatchExecutor:
         max_batches: Optional[int] = None,
         stop_delta: Optional[float] = None,
         deadline_s: Optional[float] = None,
+        tenant: Optional[str] = None,
     ) -> List[QueryResult]:
         """``deadline_s``: per-query wall-clock budget, measured from each
         query's replay start (the shared scan amortizes across queries, so
         a query replaying over already-evaluated batches is nearly free; the
         deadline bounds the batches IT forces to be scanned). On expiry the
         best-so-far answer returns, ``degraded`` with a ``"deadline"``
-        reason — every query resolves."""
+        reason — every query resolves. ``tenant``: optional label threaded
+        into the workload-intel per-tenant lookup/hit counters."""
         eng = self.engine
         max_batches = min(
             max_batches or eng.batches.n_batches, eng.batches.n_batches
@@ -122,7 +124,8 @@ class BatchExecutor:
             for i, q in enumerate(queries):
                 served = intel.lookup(
                     eng, q, target_rel_error=target_rel_error,
-                    stop_delta=stop_delta, max_batches=max_batches)
+                    stop_delta=stop_delta, max_batches=max_batches,
+                    tenant=tenant)
                 if served is not None:
                     results[i] = served
                 else:

@@ -80,19 +80,28 @@ class WorkloadIntel:
 
     def lookup(self, engine, query, target_rel_error: Optional[float] = None,
                stop_delta: Optional[float] = None,
-               max_batches: Optional[int] = None):
-        """Serve ``query`` from the answer cache, or None (execute it)."""
+               max_batches: Optional[int] = None,
+               tenant: Optional[str] = None):
+        """Serve ``query`` from the answer cache, or None (execute it).
+
+        ``tenant``: optional label (the serving front's per-tenant
+        namespace) — counted in ``telemetry.per_tenant`` so a shared cache
+        still reports per-tenant hit rates."""
         sig = QuerySignature.from_query(engine.schema, query)
         if sig is None:
             self.telemetry.lookups += 1
             self.telemetry.misses += 1
             self.telemetry.uncacheable += 1
+            if tenant is not None:
+                self.telemetry.record_tenant(tenant, hit=False)
             return None
         delta, eff = self._budget(engine, stop_delta, max_batches)
         res = self.cache.lookup(engine.store, sig, target_rel_error, delta,
                                 eff, telemetry=self.telemetry)
         if res is not None:
             self.telemetry.record_route("cache")
+        if tenant is not None:
+            self.telemetry.record_tenant(tenant, hit=res is not None)
         return res
 
     def peek(self, engine, query, target_rel_error: Optional[float] = None,

@@ -27,6 +27,12 @@ class IntelTelemetry:
     several: e.g. an entry both stale and quarantined). ``stale_served``
     counts hits served from a staleness-bumped entry whose recorded CI still
     met the caller's explicit error budget (error-budget-licensed serving).
+
+    ``per_tenant`` splits lookups/hits by the tenant label the serving
+    front threads through (``AqpService(tenant=)`` /
+    ``Session(tenant=)``) — the per-tenant hit-rate surface of
+    ``ServingFront.stats()``. Unlabeled traffic is not counted here (the
+    aggregate counters above already cover it).
     """
 
     lookups: int = 0
@@ -42,6 +48,8 @@ class IntelTelemetry:
     evictions: int = 0
     routes: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"cache": 0, "improve": 0, "scan": 0})
+    per_tenant: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def hits(self) -> int:
@@ -54,10 +62,19 @@ class IntelTelemetry:
     def record_route(self, route: str):
         self.routes[route] = self.routes.get(route, 0) + 1
 
+    def record_tenant(self, tenant: str, hit: bool):
+        t = self.per_tenant.setdefault(tenant, {"lookups": 0, "hits": 0})
+        t["lookups"] += 1
+        t["hits"] += int(hit)
+
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["hits"] = self.hits
         d["hit_rate"] = self.hit_rate
+        d["per_tenant"] = {
+            name: dict(t, hit_rate=t["hits"] / max(t["lookups"], 1))
+            for name, t in self.per_tenant.items()
+        }
         return d
 
     def state_dict(self) -> dict:
@@ -67,5 +84,11 @@ class IntelTelemetry:
         for f in dataclasses.fields(self):
             if f.name in state:
                 val = state[f.name]
-                setattr(self, f.name,
-                        dict(val) if f.name == "routes" else int(val))
+                if f.name == "routes":
+                    val = dict(val)
+                elif f.name == "per_tenant":
+                    val = {str(k): {m: int(n) for m, n in dict(v).items()}
+                           for k, v in dict(val).items()}
+                else:
+                    val = int(val)
+                setattr(self, f.name, val)

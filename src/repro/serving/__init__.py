@@ -1,2 +1,3 @@
 from repro.serving.engine import make_prefill_step, make_serve_step
 from repro.serving.aqp import AqpService, Ticket
+from repro.serving.front import Rejection, ServingFront, TenantSpec, serve_http

@@ -8,6 +8,13 @@ flush instead of once per request. Tickets resolve to ``QueryResult``s after
 the flush — the classic serving microbatch pattern (cf. decode-step batching
 in ``repro.serving.engine``) applied to query answering.
 
+Concurrency: the queue and ticket bookkeeping mutate only under the service
+lock, the engine itself is driven under a separate execution lock (pass
+``engine_lock=`` to share it between services whose engines share learned
+state — the multi-tenant front does), and every ticket carries an event so
+``Ticket.result()`` from one thread waits correctly for a flush running on
+another. Every ticket resolves exactly once (``Ticket.resolutions``).
+
 Fault isolation (the serving half of the degraded-mode contract): one poison
 query can no longer strand its microbatch. ``flush`` retries a failed fused
 execution with bounded exponential backoff (transient faults — e.g. a
@@ -22,8 +29,9 @@ the best-so-far answer returns with its honest wider CI.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from repro.aqp.batch import BatchExecutor, BatchStats
 from repro.aqp.queries import AggQuery
@@ -35,27 +43,50 @@ class Ticket:
     """Handle for one submitted query; resolved by the owning flush.
 
     The result is stored on the ticket itself, so a long-lived service
-    retains nothing once callers drop their tickets.
+    retains nothing once callers drop their tickets. ``resolutions`` counts
+    resolve calls — the exactly-once contract the concurrency tests pin.
     """
 
     _service: "AqpService"
     _result: object = None
     _done: bool = False
+    resolutions: int = 0
+    _event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
 
-    def result(self):
-        """The query's ``QueryResult`` (flushes the queue if still pending)."""
+    def result(self, timeout: Optional[float] = None):
+        """The query's ``QueryResult`` (flushes the queue if still pending).
+
+        Safe under concurrency: if another thread's flush owns this ticket's
+        batch, the local ``flush()`` finds an empty queue and this call
+        waits on the ticket's event instead of returning a premature None.
+        """
         if not self._done:
             self._service.flush()
+        if not self._event.wait(timeout):
+            raise TimeoutError("ticket unresolved after "
+                               f"{timeout}s (flush still in flight?)")
         return self._result
+
+    def _resolve(self, result) -> None:
+        self._result = result
+        self.resolutions += 1
+        self._done = True
+        self._event.set()
 
 
 class AqpService:
-    """Synchronous microbatcher over one ``VerdictEngine``.
+    """Thread-safe synchronous microbatcher over one ``VerdictEngine``.
 
     ``max_batch``: auto-flush threshold; ``target_rel_error`` /
     ``max_batches`` / ``stop_delta``: the error-budget contract applied to
     every flush (per the batched engine's per-query early stopping);
-    ``mesh``: optional device mesh for the sharded scan path.
+    ``mesh``: optional device mesh for the sharded scan path;
+    ``tenant``: optional tenant label threaded into the workload-intel
+    per-tenant counters; ``engine_lock``: pass one lock to every service
+    sharing an engine (shared-store tenancy) so engine execution — and the
+    intel prescreen that mutates shared cache state — serializes across
+    them while isolated engines keep scanning in parallel.
     """
 
     def __init__(self, engine, max_batch: int = 64,
@@ -66,7 +97,9 @@ class AqpService:
                  deadline_s: Optional[float] = None,
                  max_retries: int = 2,
                  backoff_base_s: float = 0.01,
-                 backoff_max_s: float = 0.5):
+                 backoff_max_s: float = 0.5,
+                 tenant: Optional[str] = None,
+                 engine_lock: Optional[threading.Lock] = None):
         # Accept either a raw VerdictEngine or a repro.verdict Session.
         self.engine = getattr(engine, "engine", engine)
         self.max_batch = int(max_batch)
@@ -76,9 +109,9 @@ class AqpService:
         # Per-query wall-clock deadline (ErrorBudget.deadline_s): expiry
         # returns the best-so-far answer, degraded + honest, never blocks.
         self.deadline_s = deadline_s
-        # Single-query retry budget + bounded exponential backoff between
-        # attempts (bisection isolates first; retries then absorb
-        # transient faults at single-query granularity).
+        # Slice retry budget + bounded exponential backoff between attempts
+        # (the failed fused execution retries WHOLE first — transient faults
+        # clear without bisecting — then bisection isolates persistence).
         self.max_retries = int(max_retries)
         self.backoff_base_s = float(backoff_base_s)
         self.backoff_max_s = float(backoff_max_s)
@@ -86,8 +119,15 @@ class AqpService:
         # Session.serve passes QueryAnswer.from_result so facade users get
         # the same typed answers session.execute returns.
         self.result_wrapper = result_wrapper
+        self.tenant = tenant
         self.executor = BatchExecutor(self.engine, mesh=mesh)
         self._queue: List[tuple] = []  # (query, ticket) pairs
+        # Queue/counter bookkeeping lock (never held across an engine call).
+        self._lock = threading.Lock()
+        # Engine execution lock: one flush (or prescreen) drives the engine
+        # at a time; shared across services when their engines are shared.
+        self._exec_lock = engine_lock if engine_lock is not None \
+            else threading.Lock()
         self.flushes = 0
         # Queries resolved at submit() by the workload-intelligence answer
         # cache (repro.intel) — they never entered a microbatch.
@@ -103,29 +143,37 @@ class AqpService:
         """Enqueue one query; auto-flushes when the microbatch is full.
 
         Accepts an ``AggQuery`` or anything with ``.build()`` (the facade's
-        ``QueryBuilder``).
+        ``QueryBuilder``). Thread-safe: the append and the threshold check
+        happen under one lock, so concurrent submitters can neither lose an
+        entry nor double-flush the same batch.
         """
         if not isinstance(query, AggQuery) and hasattr(query, "build"):
             query = query.build()
         ticket = Ticket(self)
         # Workload-intelligence pre-screen: a semantic-cache hit resolves
         # the ticket immediately — it never occupies a microbatch slot, so
-        # repeated dashboard queries stop forcing flush cycles at all.
+        # repeated dashboard queries stop forcing flush cycles at all. The
+        # lookup mutates shared LRU/counter state, so it runs under the
+        # engine lock like every other engine-state access.
         intel = getattr(self.engine, "intel", None)
         if intel is not None:
-            served = intel.lookup(
-                self.engine, query,
-                target_rel_error=self.target_rel_error,
-                stop_delta=self.stop_delta, max_batches=self.max_batches)
+            with self._exec_lock:
+                served = intel.lookup(
+                    self.engine, query,
+                    target_rel_error=self.target_rel_error,
+                    stop_delta=self.stop_delta, max_batches=self.max_batches,
+                    tenant=self.tenant)
             if served is not None:
                 if self.result_wrapper is not None:
                     served = self.result_wrapper(served)
-                ticket._result = served
-                ticket._done = True
-                self.prescreened += 1
+                with self._lock:
+                    self.prescreened += 1
+                ticket._resolve(served)
                 return ticket
-        self._queue.append((query, ticket))
-        if len(self._queue) >= self.max_batch:
+        with self._lock:
+            self._queue.append((query, ticket))
+            full = len(self._queue) >= self.max_batch
+        if full:
             self.flush()
         return ticket
 
@@ -136,77 +184,102 @@ class AqpService:
             max_batches=self.max_batches,
             stop_delta=self.stop_delta,
             deadline_s=self.deadline_s,
+            tenant=self.tenant,
         )
 
     def _resolve(self, queries: List[AggQuery], idxs: List[int],
-                 results: List) -> None:
-        """Fill ``results[i]`` for every ``i`` in ``idxs``: bisect on
-        failure, retry singles with bounded exponential backoff, and give a
-        terminal failure a typed ``FailedAnswer`` — never an exception.
+                 results: List, counts: Dict[int, int],
+                 top: bool = True) -> None:
+        """Fill ``results[i]`` for every ``i`` in ``idxs``: on failure retry
+        the SAME slice with bounded exponential backoff first (a transient
+        fault clears on re-run without costing the O(log n) bisect), then
+        bisect to isolate the poison query, and give a terminal failure a
+        typed ``FailedAnswer`` — never an exception.
+
+        Bisected sub-slices skip the multi-query retry (the transient
+        hypothesis was already spent at the top level); single queries
+        always retry, so a poison query gets its full budget before the
+        typed failure. ``counts`` tracks ACTUAL executions per query index —
+        ``FailedAnswer.attempts`` reports exactly how many times the query
+        ran, not a retry-loop upper bound.
 
         Re-running a slice after a mid-batch failure can re-record some
         queries' raw answers; recording is idempotent at the synopsis level
         (duplicate snippets refresh LRU stamps and keep the better answer),
         so isolation never corrupts learned state.
         """
+        def run():
+            for i in idxs:
+                counts[i] = counts.get(i, 0) + 1
+            return self._execute_slice([queries[i] for i in idxs])
+
         try:
-            out = self._execute_slice([queries[i] for i in idxs])
+            out = run()
         except BaseException as e:  # noqa: BLE001 — isolate, then type it
-            if len(idxs) > 1:
-                mid = len(idxs) // 2
-                self._resolve(queries, idxs[:mid], results)
-                self._resolve(queries, idxs[mid:], results)
-                return
-            attempts = 1
-            while attempts <= self.max_retries:
-                time.sleep(min(self.backoff_base_s * 2 ** (attempts - 1),
+            out = None
+            retries = self.max_retries if (top or len(idxs) == 1) else 0
+            for attempt in range(retries):
+                time.sleep(min(self.backoff_base_s * 2 ** attempt,
                                self.backoff_max_s))
-                attempts += 1
                 try:
-                    results[idxs[0]] = self._execute_slice(
-                        [queries[idxs[0]]])[0]
-                    return
+                    out = run()
+                    break
                 except BaseException as retry_e:  # noqa: BLE001
                     e = retry_e
-            results[idxs[0]] = FailedAnswer(
-                error=repr(e), error_type=type(e).__name__, attempts=attempts)
-            return
+            if out is None:
+                if len(idxs) > 1:
+                    mid = len(idxs) // 2
+                    self._resolve(queries, idxs[:mid], results, counts,
+                                  top=False)
+                    self._resolve(queries, idxs[mid:], results, counts,
+                                  top=False)
+                else:
+                    results[idxs[0]] = FailedAnswer(
+                        error=repr(e), error_type=type(e).__name__,
+                        attempts=counts[idxs[0]])
+                return
         for i, r in zip(idxs, out):
             results[i] = r
 
     def flush(self) -> List:
         """Execute all pending queries in one fused scan.
 
-        Every ticket RESOLVES, unconditionally: to its (possibly wrapped)
-        ``QueryResult``, or to a typed ``FailedAnswer`` if its query keeps
-        failing after bisect isolation and retries. The happy path is one
-        fused ``execute_many`` exactly as before; isolation only engages on
-        failure.
+        Every ticket RESOLVES, unconditionally and exactly once: to its
+        (possibly wrapped) ``QueryResult``, or to a typed ``FailedAnswer``
+        if its query keeps failing after retries and bisect isolation. The
+        happy path is one fused ``execute_many`` exactly as before;
+        isolation only engages on failure. Concurrent flushes serialize on
+        the engine lock; the queue swap is atomic, so two racing flushes
+        split the pending work instead of double-executing it.
         """
-        if not self._queue:
-            return []
-        batch, self._queue = self._queue, []
-        queries = [q for q, _ in batch]
-        results: List = [None] * len(batch)
-        try:
-            self._resolve(queries, list(range(len(batch))), results)
-        finally:
-            # Backstop: no ticket may ever hang or silently carry None,
-            # even if the isolation machinery itself raised.
-            out = []
-            for (_, ticket), res in zip(batch, results):
-                if res is None:
-                    res = FailedAnswer(
-                        error="flush aborted before this query resolved",
-                        error_type="RuntimeError", attempts=0)
-                elif (self.result_wrapper is not None
-                      and not isinstance(res, FailedAnswer)):
-                    res = self.result_wrapper(res)
-                ticket._result = res
-                ticket._done = True
-                out.append(res)
-            self.last_stats = self.executor.stats
-            self.flushes += 1
+        with self._exec_lock:
+            with self._lock:
+                batch, self._queue = self._queue, []
+            if not batch:
+                return []
+            queries = [q for q, _ in batch]
+            results: List = [None] * len(batch)
+            counts: Dict[int, int] = {}
+            try:
+                self._resolve(queries, list(range(len(batch))), results,
+                              counts)
+            finally:
+                # Backstop: no ticket may ever hang or silently carry None,
+                # even if the isolation machinery itself raised.
+                out = []
+                for (_, ticket), res in zip(batch, results):
+                    if res is None:
+                        res = FailedAnswer(
+                            error="flush aborted before this query resolved",
+                            error_type="RuntimeError", attempts=0)
+                    elif (self.result_wrapper is not None
+                          and not isinstance(res, FailedAnswer)):
+                        res = self.result_wrapper(res)
+                    ticket._resolve(res)
+                    out.append(res)
+                self.last_stats = self.executor.stats
+                with self._lock:
+                    self.flushes += 1
         return out
 
     def execute(self, queries: List[AggQuery]) -> List:
@@ -252,6 +325,7 @@ class AqpService:
         intel = getattr(self.engine, "intel", None)
         return {
             "store": self.engine.store.stats(),
+            "tenant": self.tenant,
             "flushes": self.flushes,
             "pending": self.pending,
             "prescreened": self.prescreened,

@@ -75,7 +75,7 @@ class ErrorBudget:
 
 def connect(relation: Relation,
             config: Optional[EngineConfig] = None,
-            mesh=None, cache=None) -> "Session":
+            mesh=None, cache=None, tenant: Optional[str] = None) -> "Session":
     """Open a Session over a relation (the driver-level entry point).
 
     ``mesh``: optional JAX mesh. One mesh shards both planes — the fused
@@ -90,8 +90,12 @@ def connect(relation: Relation,
     default ``WorkloadIntel``; an ``IntelConfig`` or a pre-built
     ``WorkloadIntel`` customizes it; ``None``/``False`` (default) keeps
     every path bit-for-bit the historical engine.
+
+    ``tenant``: optional tenant label (see ``Session.attached`` for the
+    shared-state flavor) — surfaces in ``stats()`` and threads into the
+    workload-intel per-tenant counters.
     """
-    return Session(relation, config, mesh=mesh, cache=cache)
+    return Session(relation, config, mesh=mesh, cache=cache, tenant=tenant)
 
 
 class Session:
@@ -105,7 +109,15 @@ class Session:
 
     def __init__(self, relation: Relation,
                  config: Optional[EngineConfig] = None, mesh=None,
-                 cache=None):
+                 cache=None, tenant: Optional[str] = None, _engine=None):
+        self.tenant = tenant
+        if _engine is not None:
+            # Attach mode (Session.attached): wrap an EXISTING engine —
+            # shared SynopsisStore/WorkloadIntel namespace, own executor
+            # stats and tenant label.
+            self.engine = _engine
+            self._executor = BatchExecutor(self.engine)
+            return
         store = None
         if mesh is not None:
             store = (lambda schema, cfg:
@@ -123,6 +135,20 @@ class Session:
         # The executor picks up the engine's ScanPlacement, so every path —
         # execute/execute_many/stream/serve — scans through the same seam.
         self._executor = BatchExecutor(self.engine)
+
+    @classmethod
+    def attached(cls, engine, tenant: Optional[str] = None) -> "Session":
+        """A Session over an EXISTING engine (or another Session's engine).
+
+        This is the shared-tenancy handle the serving front hands out:
+        every attached session reads and writes the SAME learned state
+        (synopsis store, workload-intel cache) while keeping its own
+        workload stats and tenant label. The caller is responsible for
+        serializing engine access across attached sessions (the front does,
+        via one engine lock per shared engine).
+        """
+        return cls(None, _engine=getattr(engine, "engine", engine),
+                   tenant=tenant)
 
     # ------------------------------------------------------------ properties
     @property
@@ -174,6 +200,7 @@ class Session:
             max_batches=budget.max_batches,
             stop_delta=budget.delta,
             deadline_s=budget.deadline_s,
+            tenant=self.tenant,
         )
         return [QueryAnswer.from_result(r) for r in results]
 
@@ -256,7 +283,8 @@ class Session:
             served = eng.intel.lookup(
                 eng, self._lower(q),
                 target_rel_error=budget.target_rel_error,
-                stop_delta=budget.delta, max_batches=budget.max_batches)
+                stop_delta=budget.delta, max_batches=budget.max_batches,
+                tenant=self.tenant)
             if served is not None:
                 # Cache hit: the stream collapses to its (final) answer —
                 # exactly what execute() under the same budget returns.
@@ -309,8 +337,11 @@ class Session:
         chaos run, the active fault plan's per-point call/fire counters.
         ``intel``: the workload-intelligence plane's hit/miss/subsumption/
         staleness/route counters (``{"enabled": False}`` without one).
+        ``tenant``: this session's tenant label (None outside the
+        multi-tenant serving front).
         """
         return {
+            "tenant": self.tenant,
             "store": self.engine.store.stats(),
             "scan": self._executor.placement.stats(),
             "workload": dataclasses.asdict(self.last_stats),
@@ -344,12 +375,14 @@ class Session:
         return self.engine.load_synopses(manager, step)
 
     def serve(self, max_batch: int = 64,
-              budget: Optional[ErrorBudget] = None):
+              budget: Optional[ErrorBudget] = None, engine_lock=None):
         """A microbatching ``AqpService`` front over this session's engine.
 
         The full ``budget`` contract (target, max_batches, delta) applies to
         every flush, builders are accepted, and tickets resolve to the same
-        typed ``QueryAnswer`` the session's own execute returns.
+        typed ``QueryAnswer`` the session's own execute returns. The
+        session's tenant label rides along; ``engine_lock`` lets the
+        multi-tenant front serialize services sharing this engine.
         """
         from repro.serving.aqp import AqpService
 
@@ -362,4 +395,5 @@ class Session:
                           max_batches=budget.max_batches,
                           stop_delta=budget.delta,
                           deadline_s=budget.deadline_s,
-                          result_wrapper=QueryAnswer.from_result)
+                          result_wrapper=QueryAnswer.from_result,
+                          tenant=self.tenant, engine_lock=engine_lock)

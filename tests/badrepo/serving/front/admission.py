@@ -1,0 +1,15 @@
+"""A008 fixture: wall-clock + RNG inside a serving-front decision module.
+
+The real ``repro.serving.front.admission`` takes ``now`` as an argument;
+reading the clock (or jittering) INSIDE the decision makes admission
+traces unreplayable and rate-limit tests flaky.
+"""
+import random
+import time
+
+
+def admit(tokens: float, rate: float) -> bool:
+    # BAD: the decision depends on when the checker happens to run.
+    tokens += rate * time.monotonic()
+    # BAD: probabilistic shedding is unreplayable.
+    return tokens >= 1.0 and random.random() > 0.01

@@ -331,6 +331,24 @@ def test_a007_clock_and_rng_in_intel_flagged(bad_files):
     assert outside == []
 
 
+def test_a008_clock_and_rng_in_front_decisions_flagged(bad_files):
+    found = ast_rules.check_front_determinism(bad_files)
+    assert _rules(found) == {"A008"}
+    msgs = " ".join(f.message for f in found)
+    assert "time" in msgs and "random" in msgs
+    # scope: only the DECISION modules (admission/metrics) — the transport
+    # layer (front.py, http.py) legitimately owns the clock
+    outside = [f for f in found
+               if not f.location.startswith("serving/front/")]
+    assert outside == []
+
+
+def test_a008_scope_is_exactly_the_decision_modules():
+    assert set(ast_rules.FRONT_DECISION_MODULES) == {
+        "serving/front/admission.py", "serving/front/metrics.py"}
+    assert "A008" in ast_rules.AST_RULES
+
+
 def test_a005_orphan_module_flagged():
     found = ast_rules.check_dead_code(BADREPO, importer_roots=())
     orphans = [f for f in found if f.location == "orphan.py"]

@@ -136,7 +136,10 @@ def test_persistent_scan_fault_typed_failure_no_hung_tickets(relation):
         ans = t.result()
         assert isinstance(ans, FailedAnswer) and ans.failed
         assert ans.error_type == "InjectedFault"
-        assert ans.attempts == 2  # first try + max_retries
+        # attempts counts ACTUAL executions of this query (not a retry-loop
+        # bound): full batch of 4 (1 + max_retries backoff retry), its
+        # bisected half of 2, then the single (1 + max_retries).
+        assert ans.attempts == 5
     # The service stays usable after the chaos clears.
     ok = svc.submit(_queries(session)[1])
     svc.flush()

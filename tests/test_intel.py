@@ -432,3 +432,53 @@ def test_stream_short_circuits_on_hit(relation):
     assert len(rounds) == 1 and rounds[0].final
     assert rounds[0].served_from == "cache:exact"
     assert _cells(rounds[0]) == _cells(first)
+
+
+def test_deadline_degraded_answer_never_cached_as_full_accuracy(relation):
+    """Satellite gate: an answer that returned early on a deadline is honest
+    but WEAKER — recording it into the answer cache would replay a degraded
+    CI as if it were the full-budget answer. It must never be inserted, and
+    the next full-budget call must execute (then cache normally)."""
+    s = vd.connect(relation, _cfg(), cache=True)
+    q = _q_grouped(s)
+    ans = s.execute(q, vd.ErrorBudget(deadline_s=0.0))
+    assert ans.degraded and "deadline" in ans.degraded_reasons
+    st = s.stats()["intel"]
+    assert st["insertions"] == 0 and st["entries"] == 0
+    # Full-budget re-execute: a MISS (nothing degraded was cached) ...
+    full = s.execute(q, B)
+    assert full.served_from is None and not full.degraded
+    # ... which now caches, and the repeat serves at full accuracy.
+    hit = s.execute(q, B)
+    assert hit.served_from == "cache:exact" and not hit.degraded
+    assert _cells(hit) == _cells(full)
+
+
+def test_per_tenant_intel_counters_and_roundtrip(relation):
+    """The serving front's per-tenant hit-rate surface: one shared intel
+    plane splits lookups/hits by the tenant label threaded through
+    ``Session.attached`` sessions, and the split survives a state_dict
+    round-trip."""
+    from repro.verdict.session import Session
+
+    s = vd.connect(relation, _cfg(), cache=True)
+    alice = Session.attached(s, tenant="alice")
+    bob = Session.attached(s, tenant="bob")
+    q = _q_grouped(s)
+    a1 = alice.execute(q, B)          # miss (cold), then cached
+    b1 = bob.execute(q, B)            # exact hit from alice's entry
+    assert b1.served_from == "cache:exact"
+    assert _cells(b1) == _cells(a1)
+    pt = s.stats()["intel"]["per_tenant"]
+    assert pt["alice"] == {"lookups": 1, "hits": 0, "hit_rate": 0.0}
+    assert pt["bob"] == {"lookups": 1, "hits": 1, "hit_rate": 1.0}
+    # Unlabeled traffic stays out of the per-tenant split.
+    s.execute(q, B)
+    assert s.stats()["intel"]["per_tenant"] == pt
+    # Persistence: the split rides the same blob the cache/router use.
+    state = s.intel.state_dict(s.store)
+    fresh = vd.connect(relation, _cfg(), cache=True)
+    fresh.intel.load_state_dict(state, fresh.store)
+    assert fresh.intel.telemetry.per_tenant == {
+        "alice": {"lookups": 1, "hits": 0},
+        "bob": {"lookups": 1, "hits": 1}}

@@ -1,6 +1,8 @@
 """AqpService microbatcher: auto-flush threshold, ticket resolution, stats
 propagation, and bitwise parity of microbatched answers vs direct
 ``execute_many`` (previously untested beyond one smoke case)."""
+import threading
+
 import pytest
 
 import repro.verdict as vd
@@ -144,3 +146,94 @@ def test_forced_raw_only_contract(relation, workload):
     assert not r.supported and r.unsupported_reason == "forced by caller"
     assert r.batches_used == 2 and r.cells
     assert len(eng.store) == 0  # no learning happened
+
+
+# ------------------------------------------------ concurrency + retry ladder
+
+
+def test_concurrent_submit_every_ticket_resolves_exactly_once(relation,
+                                                              workload):
+    """Stress the lock-free-era races: many threads submitting through the
+    auto-flush threshold concurrently. Every ticket must resolve to a real
+    answer EXACTLY once — no lost entries, no double-flushed batches, no
+    premature None from a result() racing another thread's flush."""
+    svc = AqpService(VerdictEngine(relation, _cfg()), max_batch=3)
+    n_threads, per_thread = 6, 4
+    tickets = [[] for _ in range(n_threads)]
+    start = threading.Barrier(n_threads)
+
+    def submitter(slot):
+        start.wait()
+        for i in range(per_thread):
+            q = workload[(slot * per_thread + i) % len(workload)]
+            tickets[slot].append(svc.submit(q))
+
+    threads = [threading.Thread(target=submitter, args=(s,))
+               for s in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=300)
+    assert not any(t.is_alive() for t in threads)
+    svc.flush()  # drain the sub-threshold remainder
+    all_tickets = [t for slot in tickets for t in slot]
+    assert len(all_tickets) == n_threads * per_thread
+    for t in all_tickets:
+        ans = t.result(timeout=60)
+        assert ans is not None and ans.supported is not None
+        assert t.resolutions == 1  # exactly once, despite racing flushes
+    assert svc.pending == 0
+    # No query lost or duplicated across the racing flushes.
+    assert sum(t.resolutions for t in all_tickets) == len(all_tickets)
+
+
+def test_transient_fault_retries_whole_slice_before_bisecting(relation,
+                                                              workload):
+    """The docstring's promised order — retry the FULL failed slice with
+    backoff first, only then bisect. A transient fault (fires once) must
+    cost exactly 2 ``_execute_slice`` calls (fail + clean retry), never the
+    O(log n) bisect cascade, and every answer stays a real QueryAnswer."""
+    from repro.ft import faults
+
+    svc = AqpService(VerdictEngine(relation, _cfg()), max_batch=64,
+                     max_retries=2, backoff_base_s=0.001)
+    calls = []
+    inner = svc._execute_slice
+
+    def counting(queries):
+        calls.append(len(queries))
+        return inner(queries)
+
+    svc._execute_slice = counting
+    tickets = [svc.submit(q) for q in workload[:4]]
+    with faults.inject(faults.FaultSpec("scan.eval", hits=(0,))):
+        svc.flush()
+    assert calls == [4, 4]  # full slice, failed; full slice again, clean
+    for t in tickets:
+        ans = t.result()
+        assert not getattr(ans, "failed", False)
+        assert t.resolutions == 1
+    # Bitwise: the retried batch matches a never-faulted twin engine.
+    twin = AqpService(VerdictEngine(relation, _cfg()), max_batch=64)
+    clean = twin.execute(workload[:4])
+    for t, c in zip(tickets, clean):
+        assert t.result().cells == c.cells
+
+
+def test_deadline_degraded_flush_never_primes_the_answer_cache(relation):
+    """A deadline-bounded service returns best-so-far degraded answers; the
+    workload-intel prescreen must never serve those back as full-accuracy
+    cache hits on the next submit."""
+    session = vd.connect(relation, _cfg(), cache=True)
+    svc = session.serve(max_batch=4,
+                        budget=vd.ErrorBudget(deadline_s=0.0))
+    q = session.query().avg("v0").where(vd.between("x0", 2.0, 8.0)).build()
+    first = svc.submit(q).result()
+    assert first.degraded and "deadline" in first.degraded_reasons
+    # Nothing degraded was recorded: the repeat is NOT prescreened, it
+    # re-enters a microbatch and executes again.
+    second_ticket = svc.submit(q)
+    assert svc.prescreened == 0 and svc.pending == 1
+    second = second_ticket.result()
+    assert second.degraded and second.served_from is None
+    assert session.stats()["intel"]["insertions"] == 0

@@ -1,0 +1,422 @@
+"""Multi-tenant serving front (``repro.serving.front``): admission control
+(clock-free replayable token bucket, bounded queue, typed rejections),
+shared-vs-isolated tenancy over one relation, the JSON wire codec, the
+HTTP/NDJSON transport, and the per-tenant observability surface — with
+miss-path answers pinned bitwise-equal to a direct ``Session.execute``."""
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+import repro.verdict as vd
+from repro.aqp import workload as W
+from repro.core.engine import EngineConfig
+from repro.serving.front import (
+    AdmissionConfig,
+    AdmissionController,
+    LatencyHistogram,
+    Rejection,
+    ServingFront,
+    TenantSpec,
+    TokenBucket,
+    WireError,
+    answer_to_json,
+    budget_from_json,
+    query_from_json,
+    serve_http,
+)
+from repro.verdict.answer import FailedAnswer, QueryAnswer
+
+
+@pytest.fixture(scope="module")
+def relation():
+    return W.make_relation(seed=0, n_rows=3_000, n_num=2, cat_sizes=(4,),
+                           n_measures=1, lengthscale=0.4, noise=0.2)
+
+
+def _cfg(**kw):
+    base = dict(sample_rate=0.2, n_batches=4, capacity=128, seed=0)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _cells(ans):
+    return [c.to_dict() for c in ans.cells]
+
+
+QJ = {"aggs": [{"kind": "avg", "measure": "v0"}],
+      "where": [{"op": "between", "column": "x0", "lo": 2.0, "hi": 8.0}]}
+
+
+class FakeClock:
+    """Scripted monotonic clock: admission replay's time source."""
+
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ----------------------------------------------------------- admission unit
+
+
+def test_token_bucket_is_a_pure_function_of_now():
+    b = TokenBucket(rate=2.0, burst=3, now=0.0)
+    takes = [b.try_take(0.0) for _ in range(4)]
+    assert takes == [True, True, True, False]  # burst spent, bucket dry
+    assert b.retry_after(0.0) == pytest.approx(0.5)
+    assert not b.try_take(0.4)      # 0.8 tokens refilled — still short
+    assert b.try_take(0.5)          # exactly one token at 2/s
+    # Non-monotonic input never mints tokens from the past.
+    assert not b.try_take(0.1)
+
+
+def test_admission_replays_exactly_from_a_scripted_clock():
+    script = [0.0, 0.01, 0.02, 0.6, 0.61, 1.4]
+
+    def run():
+        ctl = AdmissionController(
+            "t", AdmissionConfig(rate=2.0, burst=2, max_pending=8), now=0.0)
+        return [ctl.admit(now, queue_depth=0) is None for now in script]
+
+    first, second = run(), run()
+    assert first == second == [True, True, False, True, False, True]
+
+
+def test_queue_full_rejection_is_typed_with_retry_hint():
+    ctl = AdmissionController("t", AdmissionConfig(rate=10.0, burst=5,
+                                                   max_pending=3))
+    rej = ctl.admit(0.0, queue_depth=3)
+    assert isinstance(rej, Rejection) and rej.rejected and not rej.failed
+    assert rej.reason == "queue_full" and rej.status == 503
+    assert rej.retry_after_s == pytest.approx(0.1)
+    assert ctl.stats()["rejected_queue_full"] == 1
+    # Below the bound the same request admits (queue was the only barrier).
+    assert ctl.admit(0.0, queue_depth=2) is None
+
+
+def test_rate_limit_rejection_is_typed():
+    ctl = AdmissionController("t", AdmissionConfig(rate=1.0, burst=1,
+                                                   max_pending=8))
+    assert ctl.admit(0.0, queue_depth=0) is None
+    rej = ctl.admit(0.0, queue_depth=0)
+    assert isinstance(rej, Rejection)
+    assert rej.reason == "rate_limit" and rej.status == 429
+    assert rej.retry_after_s == pytest.approx(1.0)
+    st = ctl.stats()
+    assert st["admitted"] == 1 and st["rejected_rate_limit"] == 1
+
+
+def test_latency_histogram_quantiles():
+    h = LatencyHistogram()
+    for ms in (1, 1, 2, 2, 4, 8, 1000):
+        h.record(ms / 1e3)
+    snap = h.snapshot()
+    assert snap["count"] == 7
+    assert snap["max_s"] == pytest.approx(1.0)
+    assert 0.0005 <= snap["p50_s"] <= 0.004
+    assert snap["p99_s"] >= 0.5
+
+
+# ------------------------------------------------------------------ tenancy
+
+
+def test_shared_tenants_share_learned_state(relation):
+    front = ServingFront(relation, _cfg())
+    front.add_tenant(TenantSpec("a", isolation="shared"))
+    front.add_tenant(TenantSpec("b", isolation="shared"))
+    front.add_tenant(TenantSpec("iso", isolation="isolated"))
+    a, b, iso = (front.tenant(n) for n in ("a", "b", "iso"))
+    assert a.session.engine is b.session.engine
+    assert a.session.store is b.session.store
+    assert iso.session.engine is not a.session.engine
+    q = query_from_json(a.session.schema, QJ)
+    first = front.execute("a", q)
+    # Tenant b's IDENTICAL query prescreens from the SHARED cache ...
+    second = front.execute("b", q)
+    assert second.served_from == "cache:exact"
+    assert _cells(second) == _cells(first)
+    # ... while the isolated tenant's private cache is cold: it executes.
+    third = front.execute("iso", q)
+    assert third.served_from is None
+    # The shared intel plane splits hit rates per tenant.
+    per_tenant = front.stats()["shared_intel"]["per_tenant"]
+    assert per_tenant["a"]["hits"] == 0 and per_tenant["b"]["hits"] == 1
+
+
+def test_shared_services_share_one_engine_lock(relation):
+    front = ServingFront(relation, _cfg())
+    front.add_tenant("a")
+    front.add_tenant("b")
+    front.add_tenant(TenantSpec("iso", isolation="isolated"))
+    a, b, iso = (front.tenant(n) for n in ("a", "b", "iso"))
+    assert a.service._exec_lock is b.service._exec_lock
+    assert iso.service._exec_lock is not a.service._exec_lock
+
+
+def test_miss_path_bitwise_equal_to_direct_session(relation):
+    """The tentpole parity gate: through admission + microbatch service,
+    a fresh tenant's answer is bitwise-identical to Session.execute."""
+    front = ServingFront(relation, _cfg())
+    front.add_tenant(TenantSpec("t", isolation="isolated"))
+    direct = vd.connect(relation, _cfg())
+    qs = W.make_workload(7, relation.schema, 4,
+                         agg_kinds=("AVG", "COUNT", "SUM"))
+    for q in qs:
+        a = front.execute("t", q)
+        b = direct.execute(q)
+        assert isinstance(a, QueryAnswer) and not a.failed
+        assert _cells(a) == _cells(b)
+        assert a.batches_used == b.batches_used
+
+
+def test_duplicate_and_unknown_tenants(relation):
+    front = ServingFront(relation, _cfg())
+    front.add_tenant("a")
+    with pytest.raises(ValueError, match="already registered"):
+        front.add_tenant("a")
+    with pytest.raises(KeyError, match="unknown tenant"):
+        front.execute("ghost", None)
+    with pytest.raises(ValueError, match="isolation"):
+        TenantSpec("x", isolation="galactic")
+
+
+def test_front_rejections_are_values_and_counted(relation):
+    clock = FakeClock()
+    front = ServingFront(relation, _cfg(), clock=clock)
+    front.add_tenant(TenantSpec("t", rate=1.0, burst=1, max_pending=8))
+    q = query_from_json(front.tenant("t").session.schema, QJ)
+    first = front.execute("t", q)
+    assert isinstance(first, QueryAnswer)
+    rej = front.execute("t", q)  # clock unmoved: bucket is dry
+    assert isinstance(rej, Rejection) and rej.reason == "rate_limit"
+    clock.advance(1.5)
+    again = front.execute("t", q)
+    assert not getattr(again, "rejected", False)
+    st = front.stats("t")
+    assert st["admission"]["admitted"] == 2
+    assert st["admission"]["rejected_rate_limit"] == 1
+    assert st["metrics"]["rejected"] == {"rate_limit": 1}
+
+
+def test_stream_yields_refinements_and_final_matches_execute(relation):
+    front = ServingFront(relation, _cfg(), cache=False)
+    front.add_tenant(TenantSpec("t", isolation="isolated"))
+    q = query_from_json(front.tenant("t").session.schema, QJ)
+    rounds = list(front.stream("t", q))
+    assert len(rounds) == 4  # one refinement per sample batch
+    assert [r.final for r in rounds] == [False, False, False, True]
+    twin = vd.connect(relation, _cfg())
+    assert _cells(rounds[-1]) == _cells(twin.execute(q))
+    st = front.stats("t")["metrics"]
+    assert st["streams"] == 1 and st["stream_rounds"] == 4
+
+
+def test_per_tenant_stats_schema(relation):
+    front = ServingFront(relation, _cfg())
+    front.add_tenant("t")
+    q = query_from_json(front.tenant("t").session.schema, QJ)
+    front.execute("t", q)
+    st = front.stats("t")
+    assert st["isolation"] == "shared"
+    assert {"admitted", "rejected_rate_limit", "rejected_queue_full",
+            "rate", "burst", "max_pending"} <= set(st["admission"])
+    m = st["metrics"]
+    assert m["requests"] == 1 and m["answered"] == 1
+    assert m["failed"] == 0 and m["degraded"] == 0
+    assert "execute" in m["latency"]
+    assert {"count", "mean_s", "p50_s", "p90_s", "p99_s",
+            "max_s"} <= set(m["latency"]["execute"])
+    assert st["service"]["flushes"] == 1
+    assert st["health"]["quarantined"] == {}
+
+
+# --------------------------------------------------------------- wire codec
+
+
+def test_wire_query_lowers_through_the_builder(relation):
+    s = vd.connect(relation, _cfg())
+    wire_q = query_from_json(s.schema, {
+        "aggs": [{"kind": "avg", "measure": "v0"}, {"kind": "count"}],
+        "where": [{"op": "between", "column": "x0", "lo": 2, "hi": 8},
+                  {"op": "equals", "column": "c0", "value": 1},
+                  {"op": "one_of", "column": "c0", "values": [0, 1]}],
+        "group_by": ["c0"],
+    })
+    built = (s.query().avg("v0").count()
+             .where(vd.between("x0", 2, 8), vd.equals("c0", 1),
+                    vd.one_of("c0", [0, 1]))
+             .group_by("c0"))
+    assert wire_q.build() == built.build()
+
+
+@pytest.mark.parametrize("bad,msg", [
+    ({"aggs": []}, "non-empty"),
+    ({"aggs": [{"kind": "median", "measure": "v0"}]}, "unknown aggregate"),
+    ({"aggs": [{"kind": "avg"}]}, "needs a"),
+    ({"aggs": [{"kind": "avg", "measure": "nope"}]}, "malformed query"),
+    ({"aggs": [{"kind": "count"}],
+      "where": [{"op": "like", "column": "x0"}]}, "unknown predicate"),
+    ([1, 2], "JSON object"),
+])
+def test_wire_query_errors_are_typed(relation, bad, msg):
+    s = vd.connect(relation, _cfg())
+    with pytest.raises(WireError, match=msg):
+        query_from_json(s.schema, bad)
+
+
+def test_wire_budget_roundtrip():
+    b = budget_from_json({"target_rel_error": 0.1, "max_batches": 2,
+                          "delta": 0.9, "deadline_s": 1.5})
+    assert b == vd.ErrorBudget(0.1, 2, 0.9, 1.5)
+    assert budget_from_json(None) is None
+    with pytest.raises(WireError, match="unknown budget keys"):
+        budget_from_json({"deadline": 1.0})
+
+
+def test_wire_answer_ladder_discriminated():
+    failed = FailedAnswer(error="boom", error_type="InjectedFault",
+                          attempts=3)
+    rej = Rejection("rate_limit", "t", 0.25)
+    assert answer_to_json(failed)["kind"] == "failed"
+    assert answer_to_json(failed)["attempts"] == 3
+    r = answer_to_json(rej)
+    assert r["kind"] == "rejected" and r["retry_after_s"] == 0.25
+    with pytest.raises(TypeError):
+        answer_to_json(object())
+
+
+# ----------------------------------------------------------- HTTP transport
+
+
+@pytest.fixture(scope="module")
+def http_front(relation):
+    front = ServingFront(relation, _cfg())
+    front.add_tenant(TenantSpec("web", isolation="shared"))
+    front.add_tenant(TenantSpec("tiny", rate=0.001, burst=1, max_pending=8))
+    server = serve_http(front)
+    host, port = server.server_address
+    yield front, f"http://{host}:{port}"
+    server.shutdown()
+    server.server_close()
+
+
+def _post(base, path, body):
+    req = urllib.request.Request(
+        base + path, data=json.dumps(body).encode(),
+        headers={"Content-Type": "application/json"})
+    try:
+        with urllib.request.urlopen(req) as r:
+            return r.status, json.loads(r.read()), dict(r.headers)
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read()), dict(e.headers)
+
+
+def _get(base, path):
+    try:
+        with urllib.request.urlopen(base + path) as r:
+            return r.status, json.loads(r.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+def test_http_execute_roundtrip_bitwise(http_front, relation):
+    front, base = http_front
+    status, body, _ = _post(base, "/v1/tenants/web/execute", {"query": QJ})
+    assert status == 200 and body["kind"] == "answer"
+    twin = vd.connect(relation, _cfg())
+    direct = twin.execute(query_from_json(twin.schema, QJ))
+    got = [dict(c, group=tuple(c["group"])) for c in body["cells"]]
+    assert got == _cells(direct)  # JSON round-trip keeps float64 bits
+
+
+def test_http_explain(http_front):
+    _, base = http_front
+    status, body, _ = _post(base, "/v1/tenants/web/explain", {"query": QJ})
+    assert status == 200 and body["kind"] == "plan"
+    assert body["supported"] is True and body["n_snippets"] > 0
+
+
+def test_http_stream_ndjson(http_front, relation):
+    _, base = http_front
+    req = urllib.request.Request(
+        base + "/v1/tenants/web/stream",
+        data=json.dumps({
+            "query": {"aggs": [{"kind": "sum", "measure": "v0"}],
+                      "where": [{"op": "between", "column": "x1",
+                                 "lo": 1.0, "hi": 6.0}]},
+        }).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req) as r:
+        assert r.status == 200
+        assert r.headers["Content-Type"] == "application/x-ndjson"
+        rounds = [json.loads(line) for line in r]
+    assert len(rounds) == 4
+    assert [x["final"] for x in rounds] == [False, False, False, True]
+    assert all(x["kind"] == "answer" for x in rounds)
+
+
+def test_http_admission_rejection_statuses(http_front):
+    _, base = http_front
+    st1, _, _ = _post(base, "/v1/tenants/tiny/execute", {"query": QJ})
+    assert st1 == 200  # the burst token
+    st2, body, headers = _post(base, "/v1/tenants/tiny/execute",
+                               {"query": QJ})
+    assert st2 == 429 and body["kind"] == "rejected"
+    assert body["reason"] == "rate_limit"
+    assert float(headers["Retry-After"]) > 0
+
+
+def test_http_error_mapping(http_front):
+    _, base = http_front
+    st, body, _ = _post(base, "/v1/tenants/ghost/execute", {"query": QJ})
+    assert st == 404 and body["kind"] == "error"
+    st, body, _ = _post(base, "/v1/tenants/web/execute",
+                        {"query": {"aggs": []}})
+    assert st == 400 and "non-empty" in body["error"]
+    st, body, _ = _post(base, "/v1/tenants/web/execute", {"query": QJ,
+                        "budget": {"deadline": 1}})
+    assert st == 400 and "unknown budget keys" in body["error"]
+    st, body = _get(base, "/v1/nope")
+    assert st == 404
+
+
+def test_http_stats_and_healthz(http_front):
+    _, base = http_front
+    st, body = _get(base, "/v1/healthz")
+    assert st == 200 and body == {"ok": True}
+    st, body = _get(base, "/v1/tenants/web/stats")
+    assert st == 200 and body["metrics"]["tenant"] == "web"
+    st, body = _get(base, "/v1/stats")
+    assert st == 200 and "web" in body["tenants"]
+    assert body["shared_intel"]["enabled"] is True
+
+
+def test_http_concurrent_tenants_all_resolve(http_front, relation):
+    """Concurrent HTTP clients across tenants: every request gets a typed
+    body, never a hung socket or a 500."""
+    front, base = http_front
+    for name in ("c1", "c2", "c3"):
+        front.add_tenant(TenantSpec(name, isolation="shared"))
+    results = []
+
+    def client(name):
+        status, body, _ = _post(base, f"/v1/tenants/{name}/execute",
+                                {"query": QJ})
+        results.append((status, body["kind"]))
+
+    threads = [threading.Thread(target=client, args=(n,))
+               for n in ("c1", "c2", "c3") for _ in range(3)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not any(t.is_alive() for t in threads)
+    assert len(results) == 9
+    assert all(s == 200 and k == "answer" for s, k in results)
